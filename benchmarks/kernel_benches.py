@@ -1,0 +1,100 @@
+"""Kernel micro-benchmarks: jnp reference path timings on this host (CPU)
+plus the structural roofline numbers that matter for the TPU target
+(FLOPs/bytes per call; the Pallas kernels themselves are validated in
+interpret mode and only meaningful to time on real TPUs)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filters, sizing
+from repro.core.pdu import per_unit_filter
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def bench_lc_filter():
+    s = sizing.size_system(sizing.prototype_rack(), beta=0.0625)
+    pp = per_unit_filter(s, sizing.prototype_rack())
+    filt = filters.make_discrete_filter(pp, 1e-3)
+    t, r = 60_000, 128
+    u = 0.5 + 0.3 * jax.random.uniform(jax.random.key(0), (t, r))
+    x0 = jnp.tile(filters.steady_state(filt, jnp.array([1.0, 0.5])), (r, 1))
+    f = jax.jit(lambda uu: ops.lc_filter(filt.ad, filt.bd, filt.c[0], x0, uu)[0])
+    us, _ = _timeit(f, u)
+    samples_per_s = t * r / (us / 1e6)
+    return "kernel_lc_filter", us, f"{samples_per_s/1e6:.1f}M rack-samples/s (60s x 128 racks @1kHz)"
+
+
+def bench_pdu_sim_fused():
+    s = sizing.size_system(sizing.prototype_rack(), beta=0.0625)
+    pp = per_unit_filter(s, sizing.prototype_rack())
+    filt = filters.make_discrete_filter(pp, 1e-3)
+    t, r = 60_000, 128
+    u = 0.3 + 0.6 * jax.random.uniform(jax.random.key(1), (t, r))
+    x0 = jnp.tile(filters.steady_state(filt, jnp.array([1.0, 0.5])), (r, 1))
+    kw = dict(beta=0.0625, dt=1e-3, q_max=40.0, eta_c=0.97, eta_d=0.97,
+              p_max=1.0, soc_min=0.1, soc_max=0.9)
+    corr = jnp.zeros((t, r))
+    f = jax.jit(lambda uu: ops.pdu_sim(uu, uu[0], jnp.full((r,), 0.5), x0,
+                                       filt.ad, filt.bd, filt.c[0], corr, **kw)[0])
+    us, _ = _timeit(f, u)
+    return "kernel_pdu_sim", us, f"{t*r/(us/1e6)/1e6:.1f}M rack-samples/s fused (1 HBM pass)"
+
+
+def bench_attention():
+    b, h, t, d = 4, 8, 1024, 64
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (b, h, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, t, d), jnp.float32)
+    f = jax.jit(lambda a, b2, c: ops.attention(a, b2, c, causal=True))
+    us, _ = _timeit(f, q, k, v)
+    fl = 4 * b * h * t * t * d / 2  # causal half
+    return "kernel_attention", us, f"{fl/(us/1e6)/1e9:.1f} GFLOP/s host-ref (TPU target: Pallas)"
+
+
+def bench_rwkv6():
+    b, h, t, d = 2, 8, 1024, 64
+    ks = jax.random.split(jax.random.key(3), 5)
+    r = jax.random.normal(ks[0], (b, h, t, d)) * 0.5
+    k = jax.random.normal(ks[1], (b, h, t, d)) * 0.5
+    v = jax.random.normal(ks[2], (b, h, t, d)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, h, t, d))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (h, d)) * 0.3
+    f = jax.jit(lambda *a: ops.rwkv6_scan(*a)[0])
+    us, _ = _timeit(f, r, k, v, w, u)
+    return "kernel_rwkv6", us, f"{b*h*t/(us/1e6)/1e3:.0f}K head-tokens/s host-ref"
+
+
+def bench_rmsnorm():
+    x = jax.random.normal(jax.random.key(4), (8192, 4096), jnp.float32)
+    w = jnp.ones((4096,))
+    f = jax.jit(lambda a: ops.rmsnorm(a, w))
+    us, _ = _timeit(f, x)
+    gb = 2 * x.size * 4 / 1e9
+    return "kernel_rmsnorm", us, f"{gb/(us/1e6):.1f} GB/s host-ref (memory-bound)"
+
+
+def bench_gemm_burn():
+    a = jax.random.normal(jax.random.key(5), (512, 512), jnp.float32)
+    b2 = jax.random.normal(jax.random.key(6), (512, 512), jnp.float32)
+    f = jax.jit(lambda x, y: ops.gemm_burn(x, y, n_iters=4))
+    us, _ = _timeit(f, a, b2)
+    fl = 4 * 2 * 512**3
+    return "kernel_gemm_burn", us, f"{fl/(us/1e6)/1e9:.1f} GFLOP/s burned (duty-cycle knob x4)"
+
+
+ALL = [bench_lc_filter, bench_pdu_sim_fused, bench_attention, bench_rwkv6,
+       bench_rmsnorm, bench_gemm_burn]

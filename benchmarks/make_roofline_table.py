@@ -1,0 +1,36 @@
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables."""
+import glob
+import json
+import sys
+
+
+def fmt(v, nd=3):
+    if v == 0:
+        return "0"
+    if v < 1e-3:
+        return f"{v:.1e}"
+    return f"{v:.{nd}f}"
+
+
+def table(mesh_tag: str) -> str:
+    recs = []
+    for p in sorted(glob.glob(f"experiments/dryrun/*__{mesh_tag}.json")):
+        recs.append(json.load(open(p)))
+    lines = [
+        "| arch | shape | mem/chip GB | fits 16GB | compute s | memory s | collective s | bottleneck | useful-FLOP ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['bytes_per_device']['total_gb']} | "
+            f"{'yes' if r['fits_16gb'] else 'NO'} | {fmt(rl['compute_s'],4)} | "
+            f"{fmt(rl['memory_s'],4)} | {fmt(rl['collective_s'],4)} | "
+            f"{rl['bottleneck']} | {fmt(r['useful_flop_ratio'],3)} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    tag = sys.argv[1] if len(sys.argv) > 1 else "16_16"
+    print(table(tag))

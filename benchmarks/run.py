@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV (and a roofline summary if dry-run
+records exist under experiments/dryrun/).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from benchmarks import kernel_benches, paper_benches
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in paper_benches.ALL + kernel_benches.ALL:
+        try:
+            name, us, derived = fn()
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
+        sys.stdout.flush()
+
+    # roofline summary from dry-run records, if present
+    recs = sorted(glob.glob("experiments/dryrun/*__16_16.json"))
+    if recs:
+        print("\n# roofline (single-pod dry-run records)")
+        print("cell,bottleneck,compute_s,memory_s,collective_s,useful_flop_ratio,fits_16gb")
+        for p in recs:
+            r = json.load(open(p))
+            rl = r["roofline"]
+            print(
+                f"{r['arch']}/{r['shape']},{rl['bottleneck']},{rl['compute_s']:.4f},"
+                f"{rl['memory_s']:.4f},{rl['collective_s']:.4f},"
+                f"{r['useful_flop_ratio']:.3f},{r['fits_16gb']}"
+            )
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Reproduce the paper's evaluation figures numerically (Figs. 7/9/10/11/12/13).
+
+    PYTHONPATH=src python examples/power_conditioning.py
+
+Prints the headline number for each figure next to the paper's claim.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import burn, compliance, controller as ctrl, ess, pdu
+from repro.power import trace
+
+
+def fig9_fig10():
+    spec = compliance.GridSpec.create()
+    cfg = pdu.make_pdu(sample_dt=1e-3)
+    rack, dt = trace.choukse_testbench(jax.random.key(0))
+    st = pdu.init_state(cfg, rack[0])
+    grid, _, _ = pdu.condition(cfg, st, rack, qp_iters=40)
+    b = compliance.check(rack, dt, spec)
+    a = compliance.check(grid, dt, spec)
+    print(f"[Fig 9 ] ramp: rack {float(b.max_ramp):7.2f}/s -> grid "
+          f"{float(a.max_ramp):7.4f}/s   (spec beta=0.1, paper: within +/-10%)")
+    print(f"[Fig 10] S(f>=2Hz): rack {float(b.worst_high_freq_mag):.2e} -> grid "
+          f"{float(a.worst_high_freq_mag):.2e} (spec alpha=1e-4)")
+
+
+def fig7():
+    cfg = pdu.make_pdu()
+    for f, what in [(0.001, "passband"), (1.0, "ESS band"), (100.0, "LC band")]:
+        h = float(pdu.combined_transfer_function(cfg, jnp.asarray(f)))
+        print(f"[Fig 7 ] |H({f:7.3f} Hz)| = {h:.2e}  ({what})")
+
+
+def fig11():
+    tb, dt = trace.titanx_testbench(jax.random.key(2))
+    cal = burn.calibrate(jax.random.key(3), p_idle=0.06, p_peak=1.0)
+    sched = burn.burn_schedule(tb, dt, beta=0.1, cal=cal)
+    cfg = pdu.make_pdu(sample_dt=dt)
+    st = pdu.init_state(cfg, tb[0])
+    gez, _, telem = pdu.condition(cfg, st, tb, qp_iters=40)
+    soc = np.asarray(telem.soc)
+    nwarm = sched.conditioned.shape[0] - tb.shape[0]
+    cmp = burn.compare_energy(
+        tb, gez, sched.conditioned[nwarm:], dt,
+        soc_delta=float(soc[-1]) - 0.5, q_max_seconds=float(cfg.ess_params.q_max))
+    print(f"[Fig 11] software burn uses {float(cmp['burn_vs_easyrider_frac'])*100:.1f}% "
+          f"more energy than rack+EasyRider (paper: 19%)")
+
+
+def fig12():
+    cfg = ctrl.ControllerConfig.create(i_max=4e-3)
+    es = ess.ESSParams.create(q_max_seconds=40.0)
+    out = ctrl.simulate_soc_management(cfg, es, 0.62, n_steps=400, qp_iters=80)
+    soc = np.asarray(out["soc"])
+    hit = int(np.argmax(np.abs(soc - 0.5) <= float(cfg.deadband)))
+    print(f"[Fig 12] SoC 0.62 -> {soc[-1]:.3f} in {hit*5/60:.1f} min "
+          f"(paper: converges to S_mid=0.5 in ~20 min), monotone={bool(np.all(np.diff(soc[:hit+1])<=1e-4))}")
+
+
+def fig13():
+    rack, dt = trace.cluster_fault_trace(jax.random.key(4))
+    cfg = pdu.make_pdu(sample_dt=dt)
+    st = pdu.init_state(cfg, rack[0])
+    grid, _, _ = pdu.condition(cfg, st, rack, qp_iters=20)
+    w = max(int(0.2 / dt), 1)
+    rr = float(jnp.max(jnp.abs(rack[w:] - rack[:-w]))) / 0.2 * 40
+    rg = float(compliance.max_abs_ramp(grid, dt)) * 40
+    print(f"[Fig 13] 40 MW cluster fault: unconditioned {rr:6.1f} MW/s "
+          f"(paper: 193.7) -> conditioned {rg:.2f} MW/s (limit 4.0)")
+
+
+if __name__ == "__main__":
+    fig7()
+    fig9_fig10()
+    fig11()
+    fig12()
+    fig13()

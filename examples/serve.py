@@ -1,0 +1,66 @@
+"""Serve a small model with batched requests through the prefill/decode
+engine, with the decode workload's (much flatter) power profile conditioned
+by EasyRider — showing the sizing consequence: decode racks need a fraction
+of the battery (Appendix A.1, smaller epsilon).
+
+    PYTHONPATH=src python examples/serve.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import compliance, pdu, sizing
+from repro.models import transformer as T
+from repro.power import trace
+from repro.serve import ServeEngine
+
+
+def main():
+    cfg = smoke_config("llama3_2_1b")
+    params = T.init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, max_len=96)
+
+    prompts = jax.random.randint(jax.random.key(1), (4, 16), 0, cfg.vocab_size)
+    out = engine.generate(prompts, n_tokens=24)
+    print(f"served batch of {out.shape[0]} requests, {out.shape[1]} tokens each")
+    print("sample continuation token ids:", np.asarray(out[0, 16:26]))
+
+    # decode-shape power profile: shallow swings (epsilon ~ 0.35 not 0.8)
+    sp = trace.TestbenchSpec(
+        duration_s=120.0, sample_hz=200.0, iteration_period_s=1.0,
+        comm_fraction=0.25, p_compute=0.72, p_comm=0.52,
+        dip_period_s=30.0, dip_duration_s=0.8, p_dip=0.45, warmup_s=4.0,
+        edge_time_s=0.3,
+    )
+    rack, dt = trace.testbench_trace(sp, jax.random.key(2))
+    steady = rack[int(6.0 / dt):]  # epsilon of the serving steady state
+    eps_serve = float(steady.max() - steady.min())
+    serve_rack = sizing.RackRating(p_rated_w=10_000, p_min_w=10_000 * (1 - eps_serve))
+    s = sizing.size_system(serve_rack, beta=0.1)
+    s_train = sizing.size_system(sizing.prototype_rack(), beta=0.1)
+    print(f"serving epsilon={eps_serve:.2f}: battery {s.battery_energy_j/1e3:.0f} kJ vs "
+          f"training {s_train.battery_energy_j/1e3:.0f} kJ "
+          f"({s.battery_energy_j/s_train.battery_energy_j:.0%} of the training pack)")
+
+    # Appendix A.1: "the cutoff frequency is chosen such that the grid power
+    # harmonic content is acceptable" — serving cycles at ~1 Hz put harmonics
+    # right at f_c = 2 Hz, so size f_f from THIS workload's spectrum.
+    freqs, mags = compliance.normalized_spectrum(rack, dt)
+    f_f = sizing.filter_cutoff_for_workload(
+        (np.asarray(freqs), np.asarray(mags)), beta=0.1, alpha=1e-4, f_c=2.0)
+    print(f"workload-informed LC cutoff: f_f = {f_f:.2f} Hz (prototype default: 4 Hz)")
+    cfg_p = pdu.make_pdu(rack=serve_rack, sample_dt=dt, f_f_hz=min(f_f, 4.0))
+    st = pdu.init_state(cfg_p, rack[0])
+    grid, _, _ = pdu.condition(cfg_p, st, rack, qp_iters=20)
+    rep = compliance.check(grid, dt, compliance.GridSpec.create())
+    print(f"serving rack conditioned: ramp {float(rep.max_ramp):.4f}/s "
+          f"S(f>=2Hz)={float(rep.worst_high_freq_mag):.2e} ok={bool(rep.ok)}")
+
+
+if __name__ == "__main__":
+    main()

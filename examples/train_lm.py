@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter llama-style model for a few
+hundred steps on synthetic data, with checkpointing, fault tolerance, and
+EasyRider power simulation in the loop.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--d-model 512]
+
+The power report at the end shows the rack trace this training job *would*
+create on the production mesh (phase timeline derived from the model's cost
+profile) and that the PDU kept the grid side compliant throughout.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+from repro.configs import smoke_config
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.power.integration import PowerSim
+from repro.power.phases import HardwareConstants, PhaseModel, StepCost
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = smoke_config("llama3_2_1b")
+    cfg = dataclasses.replace(
+        cfg, n_layers=args.layers, d_model=args.d_model,
+        n_heads=max(args.d_model // 64, 1), n_kv_heads=max(args.d_model // 128, 1),
+        d_ff=args.d_model * 4, head_dim=64, vocab_size=8192, pad_vocab_multiple=256,
+    )
+    n_params = cfg.param_count()
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} ~{n_params/1e6:.0f}M params")
+
+    # Power model: what this job looks like on the 256-chip target.
+    sim = PowerSim(
+        StepCost(flops=6.0 * n_params * args.batch * args.seq * 1e3,  # scaled-up proxy
+                 hbm_bytes=2e15, collective_bytes=4e14),
+        HardwareConstants(chips=256),
+        PhaseModel(checkpoint_every_steps=50, checkpoint_stall_s=3.0),
+    )
+
+    res = train(
+        cfg,
+        DataConfig(batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size),
+        AdamWConfig(lr=1e-3),
+        TrainConfig(steps=args.steps, log_every=25, checkpoint_every=100,
+                    checkpoint_dir=args.ckpt_dir),
+        power_sim=sim,
+    )
+    print(f"\nloss: {res['first_loss']:.3f} -> {res['last_loss']:.3f}")
+    print("power report:", res["power_report"])
+    assert res["last_loss"] < res["first_loss"]
+    assert res["power_report"]["grid_ramp_ok"]
+    print("OK: trained with grid-compliant (simulated) power draw.")
+
+
+if __name__ == "__main__":
+    main()

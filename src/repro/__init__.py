@@ -1,0 +1,2 @@
+"""repro: EasyRider — power-transient-safe datacenter-scale training in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,9 @@
+"""Architecture configs (assigned pool) + shapes + registry."""
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ALIASES, ARCH_IDS, full_config, smoke_config
+from repro.configs.shapes import ALL_SHAPES, ShapeSpec, shapes_for
+
+__all__ = [
+    "ModelConfig", "ARCH_IDS", "ALIASES", "full_config", "smoke_config",
+    "ALL_SHAPES", "ShapeSpec", "shapes_for",
+]

@@ -1,0 +1,58 @@
+"""Architecture registry: --arch <id> -> (full config, smoke config)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = (
+    "stablelm_12b",
+    "llama3_2_1b",
+    "qwen1_5_4b",
+    "chatglm3_6b",
+    "deepseek_v2_236b",
+    "deepseek_v3_671b",
+    "rwkv6_7b",
+    "zamba2_2_7b",
+    "chameleon_34b",
+    "whisper_large_v3",
+)
+
+# CLI aliases with the original punctuation
+ALIASES = {
+    "stablelm-12b": "stablelm_12b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "chatglm3-6b": "chatglm3_6b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "rwkv6-7b": "rwkv6_7b",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "chameleon-34b": "chameleon_34b",
+    "whisper-large-v3": "whisper_large_v3",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch)
+    if name not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS + tuple(ALIASES))}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def full_config(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).full()
+    return _override(cfg, overrides)
+
+
+def smoke_config(arch: str, **overrides) -> ModelConfig:
+    cfg = _module(arch).smoke()
+    return _override(cfg, overrides)
+
+
+def _override(cfg: ModelConfig, overrides) -> ModelConfig:
+    if overrides:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg

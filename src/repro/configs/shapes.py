@@ -1,0 +1,44 @@
+"""Assigned input shapes and the (arch x shape) dry-run grid.
+
+  train_4k     seq 4,096   global_batch 256   (training)
+  prefill_32k  seq 32,768  global_batch 32    (inference prefill)
+  decode_32k   seq 32,768  global_batch 128   (decode: 1 new token, full cache)
+  long_500k    seq 524,288 global_batch 1     (long-context decode)
+
+``long_500k`` requires sub-quadratic attention: it runs for the SSM/hybrid
+archs (rwkv6-7b, zamba2-2.7b) and is SKIPPED for pure full-attention archs
+(see DESIGN.md §Arch-applicability).  Whisper is enc-dec (decoder present),
+so decode shapes apply with the cross-memory fixed at 1500 frames.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+TRAIN_4K = ShapeSpec("train_4k", "train", 4096, 256)
+PREFILL_32K = ShapeSpec("prefill_32k", "prefill", 32_768, 32)
+DECODE_32K = ShapeSpec("decode_32k", "decode", 32_768, 128)
+LONG_500K = ShapeSpec("long_500k", "decode", 524_288, 1)
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+# Families allowed to run long_500k (sub-quadratic sequence mixing).
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def shapes_for(family: str) -> tuple[ShapeSpec, ...]:
+    if family in SUBQUADRATIC_FAMILIES:
+        return ALL_SHAPES
+    return (TRAIN_4K, PREFILL_32K, DECODE_32K)
+
+
+def cell_id(arch: str, shape: ShapeSpec) -> str:
+    return f"{arch}/{shape.name}"

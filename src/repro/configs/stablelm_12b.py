@@ -1,0 +1,23 @@
+"""stablelm-12b: dense 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352  [hf:stabilityai/stablelm-2-12b family; hf]"""
+from repro.configs.base import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b", family="dense",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8,
+        d_ff=13824, vocab_size=100352,
+        qkv_bias=False, ffn="swiglu", norm="layernorm",
+        rope_theta=10_000.0, dtype="bfloat16",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b-smoke", family="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=512,
+        qkv_bias=False, ffn="swiglu", norm="layernorm",
+        pad_vocab_multiple=64,
+    )

@@ -1,0 +1,14 @@
+"""EasyRider core: the paper's contribution as composable JAX modules.
+
+  filters     — passive LC input filter + damping leg (§5.1)
+  ess         — battery ESS ramp-ODE control + SoC dynamics (§5.3, App. A)
+  controller  — outer/inner SoC management loops (§6, App. B)
+  compliance  — grid ramp-rate + frequency-content checks (§3)
+  sizing      — component sizing from grid spec (App. A.1)
+  burn        — software GPU-burn baseline (§7.3, App. C)
+  pdu         — the composed EasyRider PDU, streaming conditioner (§4)
+  fleet       — campus-scale aggregation (App. D)
+"""
+from repro.core import burn, compliance, controller, ess, filters, fleet, pdu, sizing
+
+__all__ = ["burn", "compliance", "controller", "ess", "filters", "fleet", "pdu", "sizing"]

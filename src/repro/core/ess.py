@@ -1,0 +1,192 @@
+"""Auxiliary energy storage system (paper §5.3, Appendix A.1).
+
+The battery branch is controlled so that the battery current obeys
+
+    d/dt i_B + beta * i_B + d/dt i_R = 0                       (paper Eq. 2)
+
+Writing the grid-facing current g = i_R + i_B, this is equivalent to
+
+    dg/dt = beta * (i_R - g),
+
+a first-order low-pass of the rack current with time constant 1/beta and
+cutoff f_b = beta / (2*pi).  Two properties follow immediately and are the
+paper's central guarantees:
+
+  * |dg/dt| <= beta * |i_R - g| <= beta * I_RATED: the grid never sees a
+    ramp steeper than ``beta`` (as a fraction of rated power per second),
+    even if the rack power steps instantaneously from rated to zero.
+  * Above f_b, fluctuations are attenuated 10x per decade (-20 dB/dec).
+
+We discretize the first-order system exactly (ZOH):
+
+    g[t+1] = g[t] + (1 - exp(-beta*dt)) * (i_R[t] - g[t]).
+
+State of charge integrates the battery current with asymmetric
+charge/discharge efficiencies (eta_c, eta_d), saturating at the safe bounds.
+When the battery saturates, the un-absorbed current passes straight through
+to the grid — this "residual" is exactly what Appendix A.1's sizing bound
+is designed to make impossible, and tests verify the bound.
+
+All functions broadcast over leading "rack" dimensions so a fleet of racks
+is simulated with one vectorized call (see ``core/fleet.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class ESSParams:
+    """Battery + control parameters (normalized to rated rack power).
+
+    Currents/powers are expressed as fractions of rated rack power (the
+    DC-DC stage holds the bus voltage constant, so current and power are
+    proportional, paper Eq. 1).
+    """
+
+    beta: jax.Array  # grid ramp limit [1/s] (fraction of rated power per s)
+    q_max: jax.Array  # usable energy capacity [s] (energy / P_RATED)
+    eta_c: jax.Array  # charge efficiency in (0, 1]
+    eta_d: jax.Array  # discharge efficiency in (0, 1]
+    p_max: jax.Array  # max |battery power| as fraction of rated power
+    soc_safe_min: jax.Array
+    soc_safe_max: jax.Array
+
+    @staticmethod
+    def create(
+        beta: float = 0.1,
+        q_max_seconds: float = 60.0,
+        eta_c: float = 0.97,
+        eta_d: float = 0.97,
+        p_max: float = 1.0,
+        soc_safe_min: float = 0.1,
+        soc_safe_max: float = 0.9,
+    ) -> "ESSParams":
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        return ESSParams(
+            beta=f(beta),
+            q_max=f(q_max_seconds),
+            eta_c=f(eta_c),
+            eta_d=f(eta_d),
+            p_max=f(p_max),
+            soc_safe_min=f(soc_safe_min),
+            soc_safe_max=f(soc_safe_max),
+        )
+
+    def cutoff_hz(self) -> jax.Array:
+        return self.beta / (2.0 * jnp.pi)
+
+
+class ESSState(NamedTuple):
+    g_filter: jax.Array  # first-order filter state tracking rack power
+    soc: jax.Array  # state of charge in [0, 1]
+
+
+def init_state(p: ESSParams, rack_power0: jax.Array, soc0: float | jax.Array = 0.5) -> ESSState:
+    return ESSState(
+        g_filter=jnp.broadcast_to(jnp.asarray(rack_power0, jnp.float32), jnp.shape(rack_power0)),
+        soc=jnp.broadcast_to(jnp.asarray(soc0, jnp.float32), jnp.shape(rack_power0)),
+    )
+
+
+def soc_increment(p: ESSParams, battery_power: jax.Array, dt: float) -> jax.Array:
+    """SoC change for one step of (signed) battery power.
+
+    battery_power > 0 means charging.  Charging stores eta_c of the energy;
+    discharging removes 1/eta_d per unit delivered (paper Eq. 14).
+    """
+    charge = jnp.maximum(battery_power, 0.0)
+    discharge = jnp.maximum(-battery_power, 0.0)
+    return (dt / p.q_max) * (p.eta_c * charge - discharge / p.eta_d)
+
+
+def step(
+    p: ESSParams,
+    state: ESSState,
+    rack_power: jax.Array,
+    dt: float,
+    corrective_power: jax.Array | float = 0.0,
+) -> tuple[ESSState, jax.Array]:
+    """Advance one sample: returns (new_state, grid_power_out).
+
+    ``corrective_power`` is the (milliamp-scale) SoC-maintenance command from
+    the software controller; positive = extra charging.  Crucially it
+    commands *battery current directly* — it does NOT enter the ramp-filter
+    state, so even a wildly wrong software command perturbs the grid by at
+    most its own (tiny) magnitude, reproducing the paper's fault-isolation
+    claim ("the controller cannot interfere with the hardware's filtering
+    even if it issues an incorrect command").
+    Saturation: if the battery cannot absorb/supply (SoC at a safe bound or
+    power beyond p_max), the excess passes through to the grid.
+    """
+    alpha = 1.0 - jnp.exp(-p.beta * dt)
+    g_new = state.g_filter + alpha * (rack_power - state.g_filter)
+
+    # Battery power implied by the control law (+corrective charge).
+    p_batt = g_new - rack_power + corrective_power
+    # Power rating limit (paper Eq. 9 sizing makes this inactive if sized right).
+    p_batt = jnp.clip(p_batt, -p.p_max, p.p_max)
+
+    # Energy limit: can't charge past soc_safe_max or discharge below min.
+    d_soc = soc_increment(p, p_batt, dt)
+    new_soc = state.soc + d_soc
+    overshoot_hi = jnp.maximum(new_soc - p.soc_safe_max, 0.0)
+    overshoot_lo = jnp.maximum(p.soc_safe_min - new_soc, 0.0)
+    # Convert SoC overshoot back to un-absorbable power and shed it.
+    shed_charge = overshoot_hi * p.q_max / (p.eta_c * dt)
+    shed_discharge = overshoot_lo * p.q_max * p.eta_d / dt
+    p_batt = p_batt - shed_charge + shed_discharge
+    new_soc = jnp.clip(new_soc, p.soc_safe_min, p.soc_safe_max)
+
+    grid_power = rack_power + p_batt
+    return ESSState(g_filter=g_new, soc=new_soc), grid_power
+
+
+def simulate(
+    p: ESSParams,
+    state: ESSState,
+    rack_power: jax.Array,  # (T, ...) fraction of rated power
+    dt: float,
+    corrective_power: jax.Array | float = 0.0,  # scalar or (T, ...)
+) -> tuple[jax.Array, jax.Array, ESSState]:
+    """Vectorized trace simulation.
+
+    Returns (grid_power (T, ...), soc (T, ...), final_state).
+    """
+    corr = jnp.broadcast_to(jnp.asarray(corrective_power, jnp.float32), rack_power.shape)
+
+    def body(s, inputs):
+        r_t, c_t = inputs
+        s2, g = step(p, s, r_t, dt, c_t)
+        return s2, (g, s2.soc)
+
+    final, (g, soc) = jax.lax.scan(body, state, (rack_power, corr))
+    return g, soc, final
+
+
+def transfer_function(p: ESSParams, f_hz: jax.Array) -> jax.Array:
+    """|H(j2πf)| of the ESS stage: first-order low-pass at f_b = beta/2π."""
+    s = 2j * jnp.pi * f_hz
+    return jnp.abs(p.beta / (s + p.beta))
+
+
+def worst_case_energy_swing(p: ESSParams, epsilon: jax.Array | float) -> jax.Array:
+    """Appendix A.1 Eq. 7: |ΔE_B| <= (ε/β) · P_RATED, in seconds·P_RATED."""
+    return jnp.asarray(epsilon) / p.beta
+
+
+def required_capacity_seconds(
+    beta: float, epsilon: float, gamma: float
+) -> float:
+    """Appendix A.1 Eq. 8: E_B >= ε/(γβ) · P_RATED (normalized: seconds)."""
+    return epsilon / (gamma * beta)
+
+
+def required_power_fraction(epsilon: float) -> float:
+    """Appendix A.1 Eq. 9: P_B >= ε · P_RATED."""
+    return epsilon

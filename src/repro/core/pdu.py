@@ -1,0 +1,244 @@
+"""The composed EasyRider PDU (paper §4-§6): filter + ESS + controller.
+
+Signal chain (per-unit, powers as fractions of rated rack power):
+
+    rack power --(ESS ramp control, Eq. 2)--> node power g
+               --(passive LC + damping)-----> grid power
+
+The ESS stage removes low-frequency content (>= f_b = beta/2pi); the LC
+stage removes high-frequency content (>= f_f).  The total response is the
+product of the two transfer functions (paper Fig. 7).  The software
+controller runs every ``cfg.dt`` (5 s) seconds of simulated time and issues
+milliamp-scale corrective currents that nudge the battery SoC toward the
+outer-loop target without perturbing the grid-facing waveform.
+
+Everything is per-unit: physical component values from ``sizing`` are
+converted with the rack base impedance so one code path serves the 10 kW
+prototype and 1 MW racks identically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compliance, controller as ctrl, ess, filters, sizing
+from repro.kernels import ops
+from repro.utils import pytree_dataclass, static_field
+
+
+@pytree_dataclass
+class PDUConfig:
+    filter_params: filters.LCFilterParams  # per-unit
+    ess_params: ess.ESSParams
+    controller: ctrl.ControllerConfig
+    sample_dt: float = static_field(default=1e-3)  # trace sample period [s]
+    software_enabled: bool = static_field(default=True)
+
+
+def per_unit_filter(s: sizing.SizingResult, rack: sizing.RackRating) -> filters.LCFilterParams:
+    """Convert physical component values to the per-unit system."""
+    z = rack.v_dc**2 / rack.p_rated_w
+    return filters.LCFilterParams.create(
+        l_f=s.l_f / z, c_f=s.c_f * z, r_da=s.r_da / z, l_da=s.l_da * (1.0 / z)
+    )
+
+
+def make_pdu(
+    rack: sizing.RackRating | None = None,
+    grid: compliance.GridSpec | None = None,
+    *,
+    sample_dt: float = 1e-3,
+    f_f_hz: float = 4.0,
+    soc_window: tuple[float, float] = (0.1, 0.9),
+    capacity_margin: float = 4.0,
+    ramp_margin: float = 1.6,
+    software_enabled: bool = True,
+    controller_cfg: ctrl.ControllerConfig | None = None,
+) -> PDUConfig:
+    """Size and assemble an EasyRider PDU for a rack + grid spec.
+
+    Default parameters reproduce the paper's prototype design point:
+    beta = 0.1/s, alpha = 1e-4, f_c = 2 Hz, f_f ~= 4 Hz.
+
+    Capacity: Appendix A.1 Eq. 8 with gamma = usable SoC window gives the
+    floor for a *single* worst-case transient starting at the favorable
+    window edge.  Operating mid-band for symmetric headroom (paper §6)
+    doubles the need, and ongoing iteration cycling adds more; like the
+    paper's intentionally oversized 74 Ah pack we apply ``capacity_margin``
+    (default 4x) on top of the Eq. 8 floor.  Tests verify both the Eq. 8
+    bound itself and that the margined design rides the testbench without
+    SoC saturation.
+
+    Ramp margin: the damped LC stage transiently amplifies the *slope* of
+    ramp-limited kinks by up to ~1.5x near its resonance, so the ESS is
+    designed to beta/ramp_margin; the composed grid-facing ramp then meets
+    the spec beta with margin (verified end-to-end in tests).
+    """
+    rack = rack or sizing.prototype_rack()
+    grid = grid or compliance.GridSpec.create()
+    beta = float(grid.beta) / ramp_margin
+    gamma = soc_window[1] - soc_window[0]
+    s = sizing.size_system(rack, beta=beta, f_f_hz=f_f_hz, gamma=gamma)
+    q_max_seconds = capacity_margin * s.battery_energy_j / rack.p_rated_w
+    ess_params = ess.ESSParams.create(
+        beta=beta,
+        q_max_seconds=q_max_seconds,
+        p_max=max(rack.epsilon * 1.25, 1.0),
+        soc_safe_min=soc_window[0],
+        soc_safe_max=soc_window[1],
+    )
+    return PDUConfig(
+        filter_params=per_unit_filter(s, rack),
+        ess_params=ess_params,
+        controller=controller_cfg or ctrl.ControllerConfig.create(),
+        sample_dt=sample_dt,
+        software_enabled=software_enabled,
+    )
+
+
+class PDUState(NamedTuple):
+    filter_state: jax.Array  # (..., 3)
+    filter_obj: filters.DiscreteFilter
+    ess_state: ess.ESSState
+    u_prev: jax.Array  # last normalized controller command
+    cmd_applied: jax.Array  # corrective power applied at the last sample
+    cmd_target: jax.Array  # corrective power to slew toward this interval
+    soc_ema: jax.Array  # BMS measurement filter (slow SoC estimate)
+
+
+def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDUState:
+    """Steady-state initialization at a constant starting power."""
+    filt = filters.make_discrete_filter(cfg.filter_params, cfg.sample_dt)
+    r0 = jnp.asarray(rack_power0, jnp.float32)
+    u0 = jnp.stack([jnp.ones_like(r0), r0], axis=-1)  # [v_in=1, i_load=r0]
+    x0 = jnp.vectorize(lambda u: filters.steady_state(filt, u), signature="(m)->(n)")(u0)
+    return PDUState(
+        filter_state=x0,
+        filter_obj=filt,
+        ess_state=ess.ESSState(g_filter=r0, soc=jnp.full_like(r0, soc0)),
+        u_prev=jnp.zeros_like(r0),
+        cmd_applied=jnp.zeros_like(r0),
+        cmd_target=jnp.zeros_like(r0),
+        soc_ema=jnp.full_like(r0, soc0),
+    )
+
+
+class Telemetry(NamedTuple):
+    soc: jax.Array  # (n_ctrl, ...) SoC at each control interval
+    command: jax.Array  # corrective power commanded per interval
+    target: jax.Array  # outer-loop SoC target per interval
+
+
+def condition(
+    cfg: PDUConfig,
+    state: PDUState,
+    rack_power: jax.Array,  # (T, ...) per-unit rack power
+    *,
+    idle_remaining_s: jax.Array | float = 0.0,
+    qp_iters: int = 120,
+) -> tuple[jax.Array, PDUState, Telemetry]:
+    """Condition a trace chunk; carries state across calls (streaming).
+
+    The outer scan advances one controller interval (cfg.controller.dt
+    seconds = k samples) at a time: the hardware path is simulated for k
+    samples while the corrective command slews linearly from the previously
+    applied value toward the latest controller output (battery converters
+    ramp; command updates must not inject steps into the grid waveform),
+    then one QP solve — fed the EMA-filtered BMS state-of-charge, so the
+    software tracks slow drift rather than chasing per-iteration workload
+    cycling — produces the next slew target.  If T is not a multiple of k
+    the trace is zero-order-hold padded and the pad discarded.
+    """
+    dt = cfg.sample_dt
+    k = max(int(round(float(cfg.controller.dt) / dt)), 1)
+    t = rack_power.shape[0]
+    n_ctrl = -(-t // k)
+    pad = n_ctrl * k - t
+    padded = (
+        jnp.concatenate([rack_power, jnp.repeat(rack_power[-1:], pad, axis=0)], axis=0)
+        if pad
+        else rack_power
+    )
+    chunks = padded.reshape((n_ctrl, k) + rack_power.shape[1:])
+
+    filt = state.filter_obj
+    meas_w = min(float(cfg.controller.dt) / float(cfg.controller.meas_tau), 1.0)
+    batch_ndim = rack_power.ndim - 1
+    ramp01 = jnp.arange(1, k + 1, dtype=jnp.float32).reshape((k,) + (1,) * batch_ndim) / k
+
+    ep = cfg.ess_params
+
+    def interval(carry, rack_chunk):
+        x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, step_idx = carry
+
+        # --- hardware path: fused ESS + SoC + LC simulation --------------
+        # (single pass; Pallas kernel on TPU, fused scan elsewhere —
+        # 1.6x wall clock over the staged pipeline, EXPERIMENTS §Perf-1)
+        corr_profile = cmd_applied + (cmd_target - cmd_applied) * ramp01  # (k, ...)
+        batched = rack_chunk.ndim > 1
+        rc = rack_chunk if batched else rack_chunk[:, None]
+        cp = corr_profile if batched else corr_profile[:, None]
+        g0 = es.g_filter if batched else es.g_filter[None]
+        s0 = es.soc if batched else es.soc[None]
+        xf0 = x_f if batched else x_f[None]
+        grid, _, (g_f, soc_f, x_new) = ops.pdu_sim(
+            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp,
+            beta=float(ep.beta), dt=dt, q_max=float(ep.q_max),
+            eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+            p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+            soc_max=float(ep.soc_safe_max),
+        )
+        if not batched:
+            grid, g_f, soc_f, x_new = grid[:, 0], g_f[0], soc_f[0], x_new[0]
+        es2 = ess.ESSState(g_filter=g_f, soc=soc_f)
+        x_f2 = x_new
+
+        # --- software path: one controller step --------------------------
+        idle_left = jnp.maximum(
+            jnp.asarray(idle_remaining_s, jnp.float32) - step_idx * k * dt, 0.0
+        )
+        s_target = ctrl.select_target(cfg.controller, cfg.ess_params, idle_left)
+        soc_meas = soc_ema + meas_w * (es2.soc - soc_ema)
+
+        def run_ctrl(soc, up):
+            out = ctrl.inner_loop_step(
+                cfg.controller, cfg.ess_params, soc, s_target, up, qp_iters=qp_iters
+            )
+            return out.corrective_power
+
+        if cfg.software_enabled:
+            vec_ctrl = run_ctrl
+            for _ in range(soc_meas.ndim):
+                vec_ctrl = jax.vmap(vec_ctrl)
+            new_cmd = vec_ctrl(soc_meas, u_prev)
+        else:
+            new_cmd = jnp.zeros_like(soc_meas)
+        new_u_prev = new_cmd / cfg.controller.i_max
+
+        telem = (es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape))
+        carry2 = (x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas, step_idx + 1)
+        return carry2, (grid, telem)
+
+    carry0 = (
+        state.filter_state, state.ess_state, state.u_prev,
+        state.cmd_applied, state.cmd_target, state.soc_ema,
+        jnp.asarray(0.0, jnp.float32),
+    )
+    (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, _), (grid_chunks, telem) = (
+        jax.lax.scan(interval, carry0, chunks)
+    )
+    grid = grid_chunks.reshape((n_ctrl * k,) + rack_power.shape[1:])[:t]
+    new_state = PDUState(
+        filter_state=x_f, filter_obj=filt, ess_state=es_f, u_prev=u_prev,
+        cmd_applied=cmd_applied, cmd_target=cmd_target, soc_ema=soc_ema,
+    )
+    return grid, new_state, Telemetry(soc=telem[0], command=telem[1], target=telem[2])
+
+
+def combined_transfer_function(cfg: PDUConfig, f_hz: jax.Array) -> jax.Array:
+    """|H_total| = |H_ESS| * |H_LC| (paper Fig. 7)."""
+    return ess.transfer_function(cfg.ess_params, f_hz) * filters.transfer_function_rack_to_grid(
+        cfg.filter_params, f_hz
+    )

@@ -1,0 +1,4 @@
+"""Deterministic synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, SyntheticLMDataset, make_batch_specs
+
+__all__ = ["DataConfig", "SyntheticLMDataset", "make_batch_specs"]

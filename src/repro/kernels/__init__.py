@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel lives in <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with a pure-jnp oracle in ref.py and a backend-dispatching public
+wrapper in ops.py.  Validated in interpret mode on CPU; compiled on TPU.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

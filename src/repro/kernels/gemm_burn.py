@@ -1,0 +1,72 @@
+"""MXU burn kernel (paper Appendix C.1, adapted GPU->TPU).
+
+The software-burn baseline needs a kernel whose FLOP count is a precise
+knob: the duty-cycle controller converts a power target into an amount of
+matrix work.  On TPU the analogue of the paper's CUDA GEMM loop is an
+MXU-aligned tiled matmul that re-accumulates its product ``n_iters`` times:
+FLOPs = n_iters * 2 * M * N * K, while the result stays numerically equal
+to A @ B (mean of identical accumulations), so correctness is testable.
+
+Tiling: (bm x bk) @ (bk x bn) blocks, MXU-aligned (multiples of 128), fp32
+accumulator scratch in VMEM; the k-loop rides the innermost grid axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _burn_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_iters: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+
+    def body(i, acc):
+        return acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    acc_ref[...] += jax.lax.fori_loop(0, n_iters, body, jnp.zeros_like(acc_ref))
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] / n_iters).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_iters", "bm", "bn", "bk", "interpret")
+)
+def gemm_burn(
+    a: jax.Array,  # (M, K)
+    b: jax.Array,  # (K, N)
+    n_iters: int = 1,
+    *,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, "MXU-aligned shapes only"
+    k_steps = k // bk
+    grid = (m // bm, n // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(_burn_kernel, n_iters=n_iters, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

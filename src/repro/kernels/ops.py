@@ -1,0 +1,90 @@
+"""Public kernel API with backend dispatch.
+
+On TPU backends the Pallas kernels run compiled; elsewhere (this CPU
+container, or any host platform) the mathematically identical pure-jnp
+references run instead.  ``force`` overrides: "pallas" (interpret=True off
+TPU — used by tests), "ref", or None (auto).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gemm_burn as _gb
+from repro.kernels import lc_filter as _lc
+from repro.kernels import pdu_sim as _pd
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import rwkv6_scan as _rw
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(force: str | None) -> tuple[bool, bool]:
+    """-> (use_pallas, interpret)."""
+    if force == "ref":
+        return False, False
+    if force == "pallas":
+        return True, not _on_tpu()
+    return _on_tpu(), False
+
+
+def rmsnorm(x, weight, eps: float = 1e-6, *, force: str | None = None):
+    use, interp = _mode(force)
+    if use:
+        return _rn.rmsnorm(x, weight, eps, interpret=interp)
+    return _ref.rmsnorm(x, weight, eps)
+
+
+def gemm_burn(a, b, n_iters: int = 1, *, force: str | None = None, **kw):
+    use, interp = _mode(force)
+    if use:
+        return _gb.gemm_burn(a, b, n_iters, interpret=interp, **kw)
+    return _ref.gemm_burn(a, b, n_iters)
+
+
+def lc_filter(ad, bd, c_row, x0, node_power, *, force: str | None = None, **kw):
+    use, interp = _mode(force)
+    if use:
+        return _lc.lc_filter(ad, bd, c_row, x0, node_power, interpret=interp, **kw)
+    return _ref.lc_filter(ad, bd, c_row, x0, node_power)
+
+
+def pdu_sim(rack_power, g0, soc0, x0, ad, bd, c_row, corrective, *, force=None, **kw):
+    use, interp = _mode(force)
+    if use:
+        return _pd.pdu_sim(
+            rack_power, g0, soc0, x0, ad, bd, c_row, corrective,
+            interpret=interp, **kw,
+        )
+    return _ref.pdu_sim(
+        rack_power, g0, soc0, x0, ad, bd, c_row, corrective=corrective, **kw
+    )
+
+
+def attention(q, k, v, *, causal=True, scale=None, force=None, **kw):
+    use, interp = _mode(force)
+    if use:
+        return _fa.flash_attention(
+            q, k, v, causal=causal, scale=scale, interpret=interp, **kw
+        )
+    return _ref.attention(q, k, v, causal=causal, scale=scale)
+
+
+def rwkv6_scan(r, k, v, w, u, state0=None, *, force=None, algorithm="auto", **kw):
+    """RWKV-6 recurrence.  ``algorithm``: "auto" picks the chunk-parallel
+    formulation on the jnp path for long sequences (28x fwd / 6.6x bwd on
+    host, EXPERIMENTS §Perf-2) and the Pallas kernel on TPU; "sequential"
+    forces the step-by-step scan (oracle)."""
+    use, interp = _mode(force)
+    if use:
+        return _rw.rwkv6_scan(r, k, v, w, u, state0, interpret=interp, **kw)
+    t = r.shape[2]
+    if algorithm == "auto" and t > 32 and t % 32 == 0:
+        return _ref.rwkv6_chunked(r, k, v, w, u, state0, chunk=32)
+    return _ref.rwkv6_scan(r, k, v, w, u, state0)

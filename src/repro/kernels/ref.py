@@ -1,0 +1,325 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret
+mode on CPU, compiled on TPU) and the implementations the public ``ops``
+wrappers fall back to on non-TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- lc_filter
+
+
+def lc_filter(
+    ad: jax.Array,  # (3, 3) discrete state matrix
+    bd: jax.Array,  # (3, 2) discrete input matrix
+    c_row: jax.Array,  # (3,) output row (grid current)
+    x0: jax.Array,  # (R, 3) initial state per rack
+    node_power: jax.Array,  # (T, R) per-unit node power (i_load input)
+) -> tuple[jax.Array, jax.Array]:
+    """State-space IIR filter over a trace; v_in is fixed at 1.0 per-unit.
+
+    Returns (grid (T, R), x_final (R, 3)).
+    """
+    b_vin = bd[:, 0]  # constant drive from v_in = 1
+    b_load = bd[:, 1]
+
+    def step(x, u_t):
+        y = x @ c_row
+        x_next = x @ ad.T + u_t[:, None] * b_load[None, :] + b_vin[None, :]
+        return x_next, y
+
+    x_f, y = jax.lax.scan(step, x0, node_power)
+    return y, x_f
+
+
+# ------------------------------------------------------------------- pdu_sim
+
+
+def pdu_sim(
+    rack_power: jax.Array,  # (T, R)
+    g0: jax.Array,  # (R,) ESS filter state
+    soc0: jax.Array,  # (R,)
+    x0: jax.Array,  # (R, 3) LC filter state
+    ad: jax.Array,
+    bd: jax.Array,
+    c_row: jax.Array,
+    *,
+    beta: float,
+    dt: float,
+    q_max: float,
+    eta_c: float,
+    eta_d: float,
+    p_max: float,
+    soc_min: float,
+    soc_max: float,
+    corrective: jax.Array | float = 0.0,  # scalar or (T, R)
+) -> tuple[jax.Array, jax.Array, tuple]:
+    """Fused EasyRider hardware path: ESS ramp control + SoC + LC filter.
+
+    Semantically identical to ``core.ess.simulate`` piped into
+    ``core.filters.simulate``; implemented as a single scan so the fused
+    Pallas kernel has a one-pass oracle. Returns (grid (T,R), soc (T,R),
+    (g_f, soc_f, x_f)).
+    """
+    alpha = 1.0 - jnp.exp(-jnp.asarray(beta) * dt)
+    corr = jnp.broadcast_to(jnp.asarray(corrective, rack_power.dtype), rack_power.shape)
+    # Unpacked state columns + scalar*vector FMAs instead of a per-step
+    # (R,3)@(3,3) dot: measured +7% wall clock on host (EXPERIMENTS §Perf-1
+    # it.3) and matches the Pallas kernel's formulation exactly.
+    a = ad
+    bl = bd[:, 1]
+    bv = bd[:, 0]
+
+    def step(carry, inp):
+        g, soc, s0, s1, s2 = carry
+        r_t, c_t = inp
+        g_new = g + alpha * (r_t - g)
+        p_batt = jnp.clip(g_new - r_t + c_t, -p_max, p_max)
+        charge = jnp.maximum(p_batt, 0.0)
+        discharge = jnp.maximum(-p_batt, 0.0)
+        d_soc = (dt / q_max) * (eta_c * charge - discharge / eta_d)
+        soc_new = soc + d_soc
+        over_hi = jnp.maximum(soc_new - soc_max, 0.0)
+        over_lo = jnp.maximum(soc_min - soc_new, 0.0)
+        p_batt = p_batt - over_hi * q_max / (eta_c * dt) + over_lo * q_max * eta_d / dt
+        soc_new = jnp.clip(soc_new, soc_min, soc_max)
+        node = r_t + p_batt
+        y = c_row[0] * s0 + c_row[1] * s1 + c_row[2] * s2
+        n0 = a[0, 0] * s0 + a[0, 1] * s1 + a[0, 2] * s2 + bl[0] * node + bv[0]
+        n1 = a[1, 0] * s0 + a[1, 1] * s1 + a[1, 2] * s2 + bl[1] * node + bv[1]
+        n2 = a[2, 0] * s0 + a[2, 1] * s1 + a[2, 2] * s2 + bl[2] * node + bv[2]
+        return (g_new, soc_new, n0, n1, n2), (y, soc_new)
+
+    carry0 = (g0, soc0, x0[:, 0], x0[:, 1], x0[:, 2])
+    (g_f, soc_f, s0, s1, s2), (grid, soc_t) = jax.lax.scan(
+        step, carry0, (rack_power, corr)
+    )
+    x_f = jnp.stack([s0, s1, s2], axis=-1)
+    return grid, soc_t, (g_f, soc_f, x_f)
+
+
+# ------------------------------------------------------------------- rmsnorm
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last axis: x * w / rms(x)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------- gemm_burn
+
+
+def gemm_burn(a: jax.Array, b: jax.Array, n_iters: int = 1) -> jax.Array:
+    """Burn-kernel semantics: the mean of ``n_iters`` evaluations of A @ B.
+
+    Numerically equal to A @ B; the iteration count is the duty-cycle knob
+    that makes the kernel burn n_iters x the FLOPs (the compiler cannot
+    elide the loop because each term is accumulated).
+    """
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+
+    def body(i, acc):
+        return acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(0, n_iters, body, acc)
+    return (acc / n_iters).astype(a.dtype)
+
+
+# ----------------------------------------------------- flash attention (fwd)
+
+
+def attention(
+    q: jax.Array,  # (B, H, Tq, D)
+    k: jax.Array,  # (B, Hkv, Tk, D)
+    v: jax.Array,  # (B, Hkv, Tk, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bias: jax.Array | None = None,  # broadcastable to (B, H, Tq, Tk)
+    chunk_q: int = 1024,
+) -> jax.Array:
+    """Reference softmax attention with GQA (H a multiple of Hkv).
+
+    For long sequences (Tq > chunk_q, no bias) queries are processed in
+    scanned, rematerialized blocks so peak memory is O(chunk_q * Tk)
+    rather than O(Tq * Tk) — this is the compile path for the 32k-token
+    dry-run shapes on the CPU/fallback backend (the Pallas kernel covers
+    TPU execution).
+    """
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    groups = h // hkv
+    kx = jnp.repeat(k, groups, axis=1)
+    vx = jnp.repeat(v, groups, axis=1)
+    tk = kx.shape[2]
+
+    def block(q_blk, q_offset):
+        # q_blk: (B, H, Bq, D); absolute position = q_offset + row + (tk - tq)
+        logits = jnp.einsum("bhqd,bhkd->bhqk", q_blk, kx).astype(jnp.float32) * scale
+        if bias is not None:
+            logits = logits + bias.astype(jnp.float32)
+        if causal:
+            rows = q_offset + jnp.arange(q_blk.shape[2]) + (tk - tq)
+            mask = jnp.arange(tk)[None, :] <= rows[:, None]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vx)
+
+    if tq <= chunk_q or tq % chunk_q != 0 or bias is not None:
+        return block(q, jnp.asarray(0))
+
+    qb = q.reshape(b, h, tq // chunk_q, chunk_q, d).transpose(2, 0, 1, 3, 4)
+
+    @jax.checkpoint
+    def body(i, q_blk):
+        return i + chunk_q, block(q_blk, i)
+
+    _, out = jax.lax.scan(body, jnp.asarray(0), qb)
+    # output feature dim follows V (MLA: q/k are 192-dim, v is 128-dim)
+    return out.transpose(1, 2, 0, 3, 4).reshape(b, h, tq, vx.shape[-1])
+
+
+# ----------------------------------------------------------------- rwkv6 scan
+
+
+def rwkv6_chunked(
+    r: jax.Array,  # (B, H, T, D)
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # decay in (0, 1)
+    u: jax.Array,  # (H, D)
+    state0: jax.Array | None = None,  # (B, H, D, D)
+    *,
+    chunk: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel RWKV-6 (EXPERIMENTS §Perf-2).
+
+    Mathematically identical to ``rwkv6_scan`` but restructured so the
+    (D, D) state is read/written once per *chunk* instead of once per
+    *step* (memory term / chunk) and the inner work becomes (L, D) x (D, L)
+    matmuls (MXU-friendly) instead of per-step outer products:
+
+      A[t,s]   = (r_t * W_{t-1}) . (k_s / W_s)          s < t   (intra)
+      o_t      = tril(A,-1) @ v + (r_t*u*k_t).v_t + (r_t*W_{t-1}) @ S_in
+      S_out    = diag(W_L) S_in + (k_s * W_L/W_s)^T v
+
+    with W_t = prod_{s<=t} w_s (per channel, fp32 logs for stability;
+    ``chunk`` bounds the exponent range).
+
+    Numerics: the factored intermediates exp(±cum) can overflow fp32 when
+    per-step decay is extreme (found by adversarial testing at w=0.01 over
+    a 64-chunk).  Exponents are clamped to ±CLAMP: any pair whose TRUE
+    relative decay is below e^-CLAMP contributes ~0 and stays ~0 after
+    clamping, so accuracy holds whenever per-chunk total decay
+    >= e^-CLAMP, i.e. mean per-step w >= exp(-CLAMP/chunk) (~0.29 at
+    chunk=32) — far below any decay this architecture's parameterization
+    reaches in practice; the sequential oracle remains available via
+    ``ops.rwkv6_scan(algorithm="sequential")`` for pathological regimes.
+    """
+    b, h, t, d = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, d, d), jnp.float32)
+    if t % chunk != 0 or t <= chunk:
+        return rwkv6_scan(r, k, v, w, u, state0)
+
+    nc = t // chunk
+    shp = (b, h, nc, chunk, d)
+    rc = r.astype(jnp.float32).reshape(shp)
+    kc = k.astype(jnp.float32).reshape(shp)
+    vc = v.astype(jnp.float32).reshape(shp)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)).reshape(shp)
+    cum = jnp.cumsum(lw, axis=3)  # inclusive
+    cum_prev = cum - lw  # exclusive: W_{t-1}
+    total = cum[:, :, :, -1:, :]  # log W_L
+
+    clamp = 40.0
+    r_tilde = rc * jnp.exp(jnp.clip(cum_prev, -clamp, clamp))  # r_t * W_{t-1}
+    k_tilde = kc * jnp.exp(jnp.clip(-cum, -clamp, clamp))  # k_s / W_s
+    k_tail = kc * jnp.exp(jnp.clip(total - cum, -clamp, clamp))  # k_s W_L/W_s
+
+    # intra-chunk attention-like matrix (strictly lower triangular)
+    a_mat = jnp.einsum("bhctd,bhcsd->bhcts", r_tilde, k_tilde)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    a_mat = jnp.where(mask[None, None, None], a_mat, 0.0)
+    o_intra = jnp.einsum("bhcts,bhcsd->bhctd", a_mat, vc)
+    # current-token bonus
+    o_diag = jnp.einsum("bhctd,bhctd->bhct", rc * u[None, :, None, None, :], kc)[
+        ..., None
+    ] * vc
+    # chunk state contributions
+    s_add = jnp.einsum("bhcsd,bhcse->bhcde", k_tail, vc)  # (B,H,nc,D,D)
+    w_chunk = jnp.exp(total[:, :, :, 0, :])  # (B,H,nc,D)
+
+    def scan_chunks(s, inp):
+        s_a, w_c, r_t = inp  # (B,H,D,D), (B,H,D), (B,H,L,D)
+        o_inter = jnp.einsum("bhtd,bhde->bhte", r_t, s)
+        s_next = w_c[..., :, None] * s + s_a
+        return s_next, o_inter
+
+    s_f, o_inter = jax.lax.scan(
+        scan_chunks,
+        state0.astype(jnp.float32),
+        (jnp.moveaxis(s_add, 2, 0), jnp.moveaxis(w_chunk, 2, 0),
+         jnp.moveaxis(r_tilde, 2, 0)),
+    )
+    o_inter = jnp.moveaxis(o_inter, 0, 2)  # (B,H,nc,L,D)
+    out = (o_intra + o_diag + o_inter).reshape(b, h, t, d)
+    return out.astype(r.dtype), s_f
+
+
+def rwkv6_scan(
+    r: jax.Array,  # (B, H, T, D) receptance
+    k: jax.Array,  # (B, H, T, D) key
+    v: jax.Array,  # (B, H, T, D) value
+    w: jax.Array,  # (B, H, T, D) per-channel decay in (0, 1): exp(-exp(...))
+    u: jax.Array,  # (H, D) bonus for the current token
+    state0: jax.Array | None = None,  # (B, H, D, D)
+    *,
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """RWKV-6 (Finch) time-mix recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t        (outer product, (D, D))
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+    Shapes follow the head-major layout; returns (out (B,H,T,D), S_T).
+    """
+    b, h, t, d = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, D, D)
+        out = jnp.einsum("bhd,bhde->bhe", r_t, s + u[None, :, :, None] * kv)
+        s_next = w_t[..., :, None] * s + kv
+        return s_next, out
+
+    xs = tuple(jnp.moveaxis(a, 2, 0).astype(jnp.float32) for a in (r, k, v, w))
+
+    # Chunked remat: without it the backward pass stores the (D, D) state
+    # for every timestep (hundreds of GB at 4k+ tokens); chunking stores one
+    # state per ``chunk`` steps and recomputes inside.
+    if t % chunk == 0 and t > chunk:
+        n_chunks = t // chunk
+        xs_c = tuple(a.reshape((n_chunks, chunk) + a.shape[1:]) for a in xs)
+
+        @jax.checkpoint
+        def chunk_body(s, inp):
+            return jax.lax.scan(step, s, inp)
+
+        s_f, out = jax.lax.scan(chunk_body, state0, xs_c)
+        out = out.reshape((t,) + out.shape[2:])
+    else:
+        s_f, out = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(out, 0, 2).astype(r.dtype), s_f

@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve entry points.
+
+NOTE: do not import repro.launch.dryrun from library code — it force-sets
+the XLA device count at import (dry-run only).
+"""

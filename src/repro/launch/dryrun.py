@@ -1,0 +1,255 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x shape) cell on
+the production meshes and extract roofline inputs.
+
+The two lines above MUST run before any jax import: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices to
+build the 16x16 single-pod and 2x16x16 multi-pod meshes.  (Only this
+script forces the device count — tests/benches see the real device.)
+
+Per cell this script:
+  1. builds the step function (train_step with full AdamW update /
+     serve prefill / serve decode against a full cache),
+  2. jit-lowers it with in/out shardings from ``repro.sharding.rules``
+     against ShapeDtypeStruct inputs (no allocation anywhere),
+  3. compiles, prints ``memory_analysis()`` (fits-or-not) and
+     ``cost_analysis()``,
+  4. parses the compiled HLO for trip-count-corrected FLOPs / HBM bytes /
+     collective wire bytes (see ``repro.launch.roofline``),
+  5. emits one JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only-cells N]
+"""
+import argparse
+
+
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import full_config, shapes_for
+from repro.configs.registry import ALIASES, ARCH_IDS
+from repro.configs.shapes import ShapeSpec
+from repro.data import make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as RL
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.sharding import rules
+from repro.train.step import build_train_step
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _param_shapes(cfg):
+    init_fn = ED.init if cfg.family == "audio" else T.init
+    return jax.eval_shape(lambda k: init_fn(k, cfg), jax.random.key(0))
+
+
+def build_cell(cfg, shape: ShapeSpec, mesh, *, opt_dtype: str, microbatches: int = 8,
+               gather_once: bool = False):
+    """-> (fn, arg_specs (ShapeDtypeStructs), in_shardings, out_shardings)."""
+    pspec = _param_shapes(cfg)
+    notes: list = []
+    param_sh = _named(mesh, rules.param_specs(pspec, mesh, notes=notes))
+    batch_specs = make_batch_specs(cfg, shape)
+    b_sh = NamedSharding(mesh, rules.batch_spec(mesh, shape.global_batch, pod="pod" in mesh.shape))
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(state_dtype=opt_dtype)
+        ostate = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), pspec)
+        opt_sh = type(ostate)(step=repl, m=param_sh, v=param_sh)
+        # Gradient accumulation: 8 microbatches keeps the live activation
+        # set at ~2 sequences/device (how one actually trains these sizes);
+        # the scan multiplies the per-layer collective schedule, which the
+        # roofline parser accounts for via while trip counts.
+        step_fn = build_train_step(cfg, opt_cfg, microbatches=microbatches,
+                                   gather_small_weights_once=gather_once)
+        args = (pspec, ostate, batch_specs, jax.ShapeDtypeStruct((), jnp.int32))
+        batch_sh = {k: b_sh for k in batch_specs}
+        in_sh = (param_sh, opt_sh, batch_sh, repl)
+        out_sh = (param_sh, opt_sh, None)
+        return step_fn, args, in_sh, out_sh, notes
+
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            def fn(params, tokens, frames):
+                state = ED.init_decode_state(params, cfg, frames, tokens.shape[0], shape.seq_len)
+                logits, state = ED.decode_step(params, cfg, tokens, state,
+                                               jnp.asarray(0, jnp.int32), prefill=True)
+                return logits[:, -1:], state
+
+            args = (pspec, batch_specs["tokens"], batch_specs["frames"])
+            in_sh = (param_sh, b_sh, b_sh)
+        else:
+            def fn(params, tokens):
+                state = T.init_decode_state(cfg, tokens.shape[0], shape.seq_len)
+                logits, state = T.decode_step(params, cfg, tokens, state,
+                                              jnp.asarray(0, jnp.int32), prefill=True)
+                return logits[:, -1:], state
+
+            args = (pspec, batch_specs["tokens"])
+            in_sh = (param_sh, b_sh)
+        state_shape = jax.eval_shape(fn, *args)[1]
+        st_sh = _named(mesh, rules.decode_state_specs(state_shape, mesh))
+        out_sh = (b_sh, st_sh)
+        return fn, args, in_sh, out_sh, notes
+
+    # decode: one token against a cache filled to seq_len
+    if cfg.family == "audio":
+        frames = batch_specs["frames"]
+        state_shape = jax.eval_shape(
+            lambda p, f: ED.init_decode_state(p, cfg, f, shape.global_batch, shape.seq_len),
+            pspec, frames,
+        )
+
+        def fn(params, tokens, state):
+            return ED.decode_step(params, cfg, tokens, state,
+                                  jnp.asarray(shape.seq_len - 1, jnp.int32))
+    else:
+        state_shape = jax.eval_shape(
+            lambda: T.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+        )
+
+        def fn(params, tokens, state):
+            return T.decode_step(params, cfg, tokens, state,
+                                 jnp.asarray(shape.seq_len - 1, jnp.int32))
+
+    st_sh = _named(mesh, rules.decode_state_specs(state_shape, mesh))
+    args = (pspec, batch_specs["tokens"], state_shape)
+    in_sh = (param_sh, b_sh, st_sh)
+    out_sh = (b_sh, st_sh)
+    return fn, args, in_sh, out_sh, notes
+
+
+def run_cell(arch: str, shape: ShapeSpec, *, multi_pod: bool, hw: RL.HardwareModel,
+             out_dir: str = "experiments/dryrun", microbatches: int = 8,
+             gather_once: bool = False) -> dict:
+    opt_dtype = "bfloat16" if "deepseek" in arch else "float32"
+    cfg = full_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, notes = build_cell(cfg, shape, mesh, opt_dtype=opt_dtype,
+                                                microbatches=microbatches,
+                                                gather_once=gather_once)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        ca = {}
+    hlo = compiled.as_text()
+    costs = RL.analyze_compiled_hlo(hlo)
+    terms = RL.roofline_terms(costs, hw)
+    mf = RL.model_flops(cfg, shape, backward=(shape.kind == "train"))
+    n_dev = mesh.size
+    record = {
+        "arch": arch,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "compile_s": round(time.time() - t0, 1),
+        "bytes_per_device": {
+            "arguments": int(mem.argument_size_in_bytes),
+            "temp": int(mem.temp_size_in_bytes),
+            "output": int(mem.output_size_in_bytes),
+            "total_gb": round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30, 3
+            ),
+        },
+        "fits_16gb": (mem.argument_size_in_bytes + mem.temp_size_in_bytes) < 16 * 2**30,
+        "xla_cost_analysis_raw": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+        "hlo": {
+            "flops_per_chip": terms.flops_per_chip,
+            "hbm_bytes_per_chip": terms.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": terms.collective_bytes_per_chip,
+            "collective_breakdown": costs.collective_breakdown,
+            "n_collectives": costs.n_collectives,
+            "while_trip_counts": costs.while_trip_counts,
+        },
+        "roofline": {
+            "compute_s": terms.compute_s,
+            "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "bottleneck": terms.bottleneck,
+            "step_time_s": terms.step_time_s,
+        },
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / n_dev,
+        "useful_flop_ratio": (mf / n_dev) / max(terms.flops_per_chip, 1.0),
+        "sharding_notes": notes,
+        "opt_state_dtype": opt_dtype,
+        "microbatches": microbatches if shape.kind == "train" else None,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape.name}__{record['mesh'].replace('x', '_')}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--gather-once", action="store_true")
+    args = ap.parse_args(argv)
+
+    hw = RL.HardwareModel()
+    cells: list[tuple[str, ShapeSpec]] = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (ALIASES.get(args.arch, args.arch),)
+    for arch in archs:
+        cfg = full_config(arch)
+        for shape in shapes_for(cfg.family):
+            if args.shape and shape.name != args.shape:
+                continue
+            cells.append((arch, shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}/{shape.name}/{'2x16x16' if mp else '16x16'}"
+            try:
+                rec = run_cell(arch, shape, multi_pod=mp, hw=hw, out_dir=args.out_dir,
+                               microbatches=args.microbatches, gather_once=args.gather_once)
+                r = rec["roofline"]
+                print(
+                    f"[ok] {tag}: compile {rec['compile_s']}s  "
+                    f"mem/dev {rec['bytes_per_device']['total_gb']} GB  "
+                    f"compute {r['compute_s']:.4f}s memory {r['memory_s']:.4f}s "
+                    f"collective {r['collective_s']:.4f}s -> {r['bottleneck']}",
+                    flush=True,
+                )
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL] {tag}: {e}", flush=True)
+                traceback.print_exc()
+    print(f"\n{len(cells) * len(meshes) - len(failures)} passed, {len(failures)} failed")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

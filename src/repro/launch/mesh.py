@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run forces 512 host devices before any
+jax import; tests and benches see the single real device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256-chip pod, or 2x16x16 = 512-chip two-pod mesh.
+
+    DP runs over ("pod","data") — cross-pod traffic is only the small
+    gradient/optimizer reduction over the pod axis (DCN-friendly); TP/EP
+    stay inside a pod on the "model" axis (ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Debug/test mesh over whatever devices exist (usually 1 CPU)."""
+    n = jax.device_count()
+    mp = min(model_parallel, n)
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto,) * 2
+    )

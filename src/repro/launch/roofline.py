@@ -1,0 +1,398 @@
+"""Roofline analysis from compiled HLO (EXPERIMENTS.md §Roofline).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — flops identical for 2- and 8-layer scans), so scanned-layer
+models need execution-count-aware accounting.  This module parses the
+post-SPMD compiled HLO text:
+
+  * builds the computation call graph (entry -> while bodies/conds,
+    fusions, calls) with **while trip counts** recovered from the largest
+    integer constant in each loop's condition computation (JAX scans lower
+    to ``lt(i, L)``);
+  * FLOPs: every ``dot`` op -> 2 * prod(output) * K (K = contracted size
+    from the operand symbol table), times its computation's execution
+    multiplier; convolutions counted analogously;
+  * HBM bytes: operand + output bytes of top-level (post-fusion) ops,
+    skipping pure aliasing ops (bitcast/tuple/get-tuple-element/parameter);
+  * collective bytes: ring-model wire volume per device —
+      all-gather        (g-1) * input
+      reduce-scatter    (g-1)/g * input
+      all-reduce        2 (g-1)/g * buffer
+      all-to-all        (g-1)/g * input
+      collective-permute input
+    with the group size g parsed from ``replica_groups=[n,g]<=[...]``.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  Terms are reported in seconds; the max of the three is
+the bottleneck.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ALIAS_OPS = {
+    "bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "optimization-barrier",
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12  # bf16 per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    ici_bw: float = 50e9  # bytes/s per link
+    chips: int = 256
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+# ------------------------------------------------------------- HLO parse --
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string, summing tuple elements."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dtype, dims = m.groups()
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    var: str
+    opcode: str
+    type_str: str
+    operands: list[str]
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    vars: dict  # var -> type_str
+
+
+# The type can be a simple shaped type (f32[16,256]{1,0}) or a TUPLE type
+# with spaces ((s32[], f32[16,256]{1,0}, ...)) — while/tuple ops use these.
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\([^)]*\)|[^\s]+)\s+([\w\-]+)\((.*)$"
+)
+# Computation headers: `%name (params...) -> type {` — params may contain
+# nested parens (tuple types), so match greedily to the trailing `-> ... {`.
+_COMP_HEAD = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+
+
+def parse_hlo(text: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HEAD.match(line)
+        if m and not line.lstrip().startswith("%param"):
+            cur = _Computation(name=m.group(1), ops=[], vars={})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_LINE.match(line)
+        if not om:
+            continue
+        var, type_str, opcode, rest = om.groups()
+        operands = re.findall(r"(%[\w.\-]+)", rest.split(", metadata=")[0])
+        cur.ops.append(_Op(var=var, opcode=opcode, type_str=type_str,
+                           operands=operands, line=line))
+        cur.vars[var] = type_str
+    return comps
+
+
+def _cond_names(comps: dict[str, _Computation]) -> set[str]:
+    """Names of computations used as a while condition."""
+    out = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                m = re.search(r"condition=(%[\w.\-]+)", op.line)
+                if m:
+                    out.add(m.group(1))
+    return out
+
+
+def _while_trip_counts(comps: dict[str, _Computation]) -> dict[str, int]:
+    """cond-computation name -> trip count.
+
+    Only computations actually referenced as ``condition=`` of a while op
+    are considered (a naive constant sweep would pick up vocab-size
+    constants from unrelated fusions).  JAX scans compare the counter
+    against the bound with LT, so the bound is the max scalar int constant
+    reachable from the condition (including via its fusions).
+    """
+    conds = _cond_names(comps)
+    out = {}
+    for name in conds:
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        consts: list[int] = []
+
+        def collect(c: _Computation, depth=0):
+            if depth > 4:
+                return
+            for op in c.ops:
+                if op.opcode == "constant":
+                    m = re.search(r"constant\((-?\d+)\)", op.line)
+                    if m:
+                        consts.append(int(m.group(1)))
+                for cal in re.findall(r"(?:calls|to_apply)=(%[\w.\-]+)", op.line):
+                    if cal in comps:
+                        collect(comps[cal], depth + 1)
+                # fusions may reference constants defined in this computation
+                # (already collected) or pass them as operands (also here).
+
+        collect(comp)
+        if consts:
+            out[name] = max(consts)
+    return out
+
+
+def _multipliers(
+    comps: dict[str, _Computation], entry: str
+) -> tuple[dict[str, float], set[str]]:
+    """Execution count per computation, walking whiles/fusions/calls.
+
+    Returns (multipliers, hbm_comps): the latter is the set of computations
+    whose ops are *top-level* (entry, while bodies/conds, calls) — fusion
+    and to_apply callees execute in registers/VMEM and must not contribute
+    to the HBM-bytes estimate (their dots still count FLOPs).
+    """
+    trip = _while_trip_counts(comps)
+    mult: dict[str, float] = defaultdict(float)
+    hbm_comps: set[str] = set()
+
+    def visit(name: str, m: float, depth=0, top=True):
+        if name not in comps or depth > 50:
+            return
+        mult[name] += m
+        if top:
+            hbm_comps.add(name)
+        for op in comps[name].ops:
+            if op.opcode == "while":
+                cm = re.search(r"condition=(%[\w.\-]+)", op.line)
+                bm = re.search(r"body=(%[\w.\-]+)", op.line)
+                t = max(trip.get(cm.group(1), 1) if cm else 1, 1)
+                if bm:
+                    visit(bm.group(1), m * t, depth + 1, top)
+                if cm:
+                    visit(cm.group(1), m * (t + 1), depth + 1, top)
+            elif op.opcode == "call":
+                for cal in re.findall(r"to_apply=(%[\w.\-]+)", op.line):
+                    visit(cal, m, depth + 1, top)
+            elif op.opcode in ("fusion", "custom-call", "map", "reduce",
+                               "reduce-window", "sort", "scatter",
+                               "select-and-scatter", "all-reduce",
+                               "reduce-scatter"):
+                for cal in re.findall(r"(?:calls|to_apply)=(%[\w.\-]+)", op.line):
+                    visit(cal, m, depth + 1, False)
+        return
+
+    visit(entry, 1.0)
+    return dict(mult), hbm_comps
+
+
+def _entry_name(comps: dict[str, _Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+(%[\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    # fall back: computation named like main
+    for name in comps:
+        if "main" in name:
+            return name
+    return next(iter(comps))
+
+
+@dataclasses.dataclass
+class HLOCosts:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    n_collectives: int
+    while_trip_counts: dict
+
+
+def analyze_compiled_hlo(text: str) -> HLOCosts:
+    comps = parse_hlo(text)
+    entry = _entry_name(comps, text)
+    mult, hbm_comps = _multipliers(comps, entry)
+
+    flops = 0.0
+    hbm = 0.0
+    coll = 0.0
+    coll_break: dict[str, float] = defaultdict(float)
+    n_coll = 0
+
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        count_hbm = name in hbm_comps
+        for op in comp.ops:
+            out_bytes = _shape_bytes(op.type_str)
+            opc = op.opcode
+            if opc == "dot":
+                _, out_dims = _shape_dims(op.type_str)
+                lhs_t = comp.vars.get(op.operands[0] if op.operands else "", "")
+                _, lhs_dims = _shape_dims(lhs_t)
+                cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+                k = 1
+                if cdims and lhs_dims:
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            k *= lhs_dims[int(d)]
+                flops += m * 2.0 * math.prod(out_dims or [0]) * k
+            elif opc == "convolution":
+                # rough: 2 * output * (kernel_elems * in_ch) — parse kernel operand
+                _, out_dims = _shape_dims(op.type_str)
+                rhs_t = comp.vars.get(op.operands[1] if len(op.operands) > 1 else "", "")
+                _, rhs_dims = _shape_dims(rhs_t)
+                flops += m * 2.0 * math.prod(out_dims or [0]) * max(
+                    math.prod(rhs_dims or [1]) // max(out_dims[-1] if out_dims else 1, 1), 1
+                )
+            if opc in COLLECTIVES or any(opc.startswith(c) for c in COLLECTIVES):
+                base = opc.split(".")[0]
+                gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+                g = int(gm.group(2)) if gm else 1
+                in_bytes = sum(
+                    _shape_bytes(comp.vars.get(o, "")) for o in op.operands
+                    if o in comp.vars
+                ) or out_bytes
+                if base == "all-gather":
+                    wire = (g - 1) * in_bytes
+                elif base == "all-reduce":
+                    wire = 2.0 * (g - 1) / max(g, 1) * out_bytes
+                elif base == "reduce-scatter":
+                    wire = (g - 1) / max(g, 1) * in_bytes
+                elif base == "all-to-all":
+                    wire = (g - 1) / max(g, 1) * in_bytes
+                else:  # collective-permute
+                    wire = in_bytes
+                coll += m * wire
+                coll_break[base] += m * wire
+                n_coll += 1
+            if count_hbm and opc not in _ALIAS_OPS and opc != "while":
+                # Op-aware traffic model: write output once, read operands
+                # once — except ops that only touch a slice-sized window of
+                # a big operand (dynamic-slice reads its output's worth;
+                # dynamic-update-slice writes the update in place) and ops
+                # that generate rather than read (broadcast/iota).
+                if opc == "dynamic-slice":
+                    traffic = 2 * out_bytes
+                elif opc == "dynamic-update-slice":
+                    upd = (
+                        _shape_bytes(comp.vars.get(op.operands[1], ""))
+                        if len(op.operands) > 1
+                        else out_bytes
+                    )
+                    traffic = 2 * upd
+                elif opc in ("broadcast", "iota"):
+                    traffic = out_bytes
+                else:
+                    in_bytes = sum(
+                        _shape_bytes(comp.vars.get(o, "")) for o in op.operands
+                        if o in comp.vars
+                    )
+                    traffic = out_bytes + in_bytes
+                hbm += m * traffic
+
+    return HLOCosts(
+        flops_per_device=flops,
+        hbm_bytes_per_device=hbm,
+        collective_bytes_per_device=coll,
+        collective_breakdown=dict(coll_break),
+        n_collectives=n_coll,
+        while_trip_counts=_while_trip_counts(comps),
+    )
+
+
+# ------------------------------------------------------------- terms ------
+
+
+def roofline_terms(costs: HLOCosts, hw: HardwareModel, *, ici_links: int = 4) -> RooflineTerms:
+    """Three roofline terms in seconds (per chip; the mesh is SPMD)."""
+    compute_s = costs.flops_per_device / hw.peak_flops
+    memory_s = costs.hbm_bytes_per_device / hw.hbm_bw
+    collective_s = costs.collective_bytes_per_device / (hw.ici_bw * ici_links)
+    return RooflineTerms(
+        flops_per_chip=costs.flops_per_device,
+        hbm_bytes_per_chip=costs.hbm_bytes_per_device,
+        collective_bytes_per_chip=costs.collective_bytes_per_device,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+    )
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """MODEL_FLOPS = 6*N*D (train) or 2*N*D (forward-only), N = active params."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "train" else
+                                   (shape.seq_len if shape.kind == "prefill" else 1))
+    per_tok = 6.0 * n if backward else 2.0 * n
+    return per_tok * tokens

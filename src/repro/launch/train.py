@@ -1,0 +1,59 @@
+"""Training launcher: --arch <id> picks any assigned architecture (smoke
+scale on CPU; the full configs are exercised via dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import smoke_config
+from repro.configs.registry import ALIASES, ARCH_IDS
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.power.integration import PowerSim
+from repro.power.phases import HardwareConstants, PhaseModel, StepCost
+from repro.train import TrainConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    help=f"one of {sorted(ALIASES) + list(ARCH_IDS)}")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--power-sim", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch)
+    sim = None
+    if args.power_sim:
+        n = cfg.param_count()
+        sim = PowerSim(
+            StepCost(flops=6.0 * n * args.batch * args.seq * 1e3,
+                     hbm_bytes=1e15, collective_bytes=2e14),
+            HardwareConstants(chips=256),
+            PhaseModel(),
+        )
+    res = train(
+        cfg,
+        DataConfig(batch=args.batch, seq_len=args.seq, vocab_size=cfg.vocab_size),
+        AdamWConfig(lr=args.lr),
+        TrainConfig(steps=args.steps, log_every=max(args.steps // 10, 1),
+                    checkpoint_dir=args.ckpt_dir, resume=args.resume,
+                    microbatches=args.microbatches),
+        power_sim=sim,
+    )
+    for rec in res["history"]:
+        print(rec)
+    if sim is not None:
+        print("power:", res["power_report"])
+
+
+if __name__ == "__main__":
+    main()

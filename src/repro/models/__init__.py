@@ -1,0 +1,4 @@
+"""Model zoo: composable layers + the 10 assigned architectures."""
+from repro.models import attention, blocks, encdec, layers, mamba2, moe, rwkv6, transformer
+
+__all__ = ["attention", "blocks", "encdec", "layers", "mamba2", "moe", "rwkv6", "transformer"]

@@ -1,0 +1,256 @@
+"""Attention variants: GQA (w/ bias, partial RoPE, qk-norm) and DeepSeek MLA.
+
+Both expose the interface used by the train/serve substrate:
+
+  * ``init_*``                   — parameters
+  * ``*_fwd(..., cache=None)``   — training / prefill (returns fresh cache)
+  * ``*_fwd(..., cache=state)``  — token decode against a preallocated cache
+
+KV caches:
+  * GQA: (k, v) each (B, S, Hkv, Dh)
+  * MLA: compressed — k slot holds c_kv (B, S, kv_lora_rank), v slot holds
+    the shared k_rope (B, S, qk_rope_head_dim).  The decode path uses the
+    *absorbed* formulation (W_uk folded into the query, W_uv into the
+    output) so per-token decode cost scales with kv_lora_rank rather than
+    n_heads * head_dim — the property that makes MLA caches ~1/10 of GQA.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+class KVCache(NamedTuple):
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # () int32 — filled prefix
+
+
+def _grouped_softmax_attention(
+    q: jax.Array,  # (B, T, H, Dh)
+    k: jax.Array,  # (B, S, Hkv, Dh)
+    v: jax.Array,  # (B, S, Hkv, Dv)
+    q_start: jax.Array,  # () int32: absolute position of q[:, 0]
+    scale: float,
+) -> jax.Array:
+    """Decode/chunked-prefill attention with GQA grouping.
+
+    Causal across the whole cache: query i (absolute q_start + i) attends
+    keys at positions <= its own — correct for both one-token decode and
+    multi-token chunked prefill.
+    """
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, dh)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) * scale
+    rows = q_start + jnp.arange(t)  # absolute query positions
+    cols = jnp.arange(s)
+    mask = cols[None, :] <= rows[:, None]  # (t, s)
+    logits = jnp.where(mask[None, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshe->bthge", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, v.shape[-1])
+
+
+# ================================================================== GQA ====
+
+
+def init_gqa(key, cfg: ModelConfig, dtype) -> L.Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_linear(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": L.init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": L.init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": L.init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = L.init_norm(hd, "rmsnorm", dtype)
+        p["k_norm"] = L.init_norm(hd, "rmsnorm", dtype)
+    return p
+
+
+def gqa_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, T, D)
+    positions: jax.Array,  # (B, T) absolute positions
+    cache: KVCache | None = None,
+    *,
+    causal: bool = True,
+) -> tuple[jax.Array, KVCache | None]:
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x).reshape(b, t, cfg.n_heads, hd)
+    k = L.linear(p["wk"], x).reshape(b, t, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], x).reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = L.norm_fwd(p["q_norm"], q, "rmsnorm", cfg.norm_eps)
+        k = L.norm_fwd(p["k_norm"], k, "rmsnorm", cfg.norm_eps)
+    if cfg.rope_fraction > 0:
+        sin, cos = L.rope_frequencies(
+            int(hd * cfg.rope_fraction), cfg.rope_theta, positions
+        )
+        q = L.apply_rope(q, sin, cos, cfg.rope_fraction)
+        k = L.apply_rope(k, sin, cos, cfg.rope_fraction)
+
+    if cache is None:
+        out = ops.attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=causal,
+        ).transpose(0, 2, 1, 3)
+        new_cache = KVCache(k=k, v=v, length=jnp.asarray(t, jnp.int32))
+    else:
+        idx = cache.length
+        ck = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), idx, axis=1)
+        out = _grouped_softmax_attention(q, ck, cv, idx, 1.0 / math.sqrt(hd))
+        new_cache = KVCache(k=ck, v=cv, length=idx + t)
+    o = out.reshape(b, t, cfg.n_heads * hd)
+    return L.linear(p["wo"], o), new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        length=jnp.asarray(0, jnp.int32),
+    )
+
+
+# ================================================================== MLA ====
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> L.Params:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p: L.Params = {}
+    if m.q_lora_rank:
+        p["wq_a"] = L.init_linear(ks[0], d, m.q_lora_rank, dtype)
+        p["q_a_norm"] = L.init_norm(m.q_lora_rank, "rmsnorm", dtype)
+        p["wq_b"] = L.init_linear(ks[1], m.q_lora_rank, h * qk_dim, dtype)
+    else:
+        p["wq"] = L.init_linear(ks[0], d, h * qk_dim, dtype)
+    # joint KV compression + decoupled rope key
+    p["wkv_a"] = L.init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_a_norm"] = L.init_norm(m.kv_lora_rank, "rmsnorm", dtype)
+    p["wk_b"] = L.init_linear(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim, dtype)
+    p["wv_b"] = L.init_linear(ks[4], m.kv_lora_rank, h * m.v_head_dim, dtype)
+    p["wo"] = L.init_linear(ks[5], h * m.v_head_dim, d, dtype)
+    return p
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        q = L.linear(p["wq_a"], x)
+        q = L.norm_fwd(p["q_a_norm"], q, "rmsnorm", cfg.norm_eps)
+        q = L.linear(p["wq_b"], q)
+    else:
+        q = L.linear(p["wq"], x)
+    q = q.reshape(b, t, h, qk_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    sin, cos = L.rope_frequencies(m.qk_rope_head_dim, cfg.rope_theta, positions)
+    q_rope = L.apply_rope(q_rope, sin, cos, 1.0)
+    return q_nope, q_rope, (sin, cos)
+
+
+def mla_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: KVCache | None = None,
+) -> tuple[jax.Array, KVCache | None]:
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope, (sin, cos) = _mla_q(p, cfg, x, positions)
+
+    kv_a = L.linear(p["wkv_a"], x)  # (B, T, R + rope)
+    c_kv, k_rope = kv_a[..., : m.kv_lora_rank], kv_a[..., m.kv_lora_rank :]
+    c_kv = L.norm_fwd(p["kv_a_norm"], c_kv, "rmsnorm", cfg.norm_eps)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], sin, cos, 1.0)[:, :, 0, :]  # shared
+
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    if cache is None:
+        # training/prefill: expand keys/values (FLOP-optimal at long T)
+        k_nope = L.linear(p["wk_b"], c_kv).reshape(b, t, h, m.qk_nope_head_dim)
+        v = L.linear(p["wv_b"], c_kv).reshape(b, t, h, m.v_head_dim)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, t, h, m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        out = ops.attention(
+            q_full.transpose(0, 2, 1, 3), k_full.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, scale=scale,
+        ).transpose(0, 2, 1, 3)
+        o = out.reshape(b, t, h * m.v_head_dim)
+        new_cache = KVCache(k=c_kv, v=k_rope, length=jnp.asarray(t, jnp.int32))
+        return L.linear(p["wo"], o), new_cache
+
+    # ---- decode: absorbed formulation over the compressed cache ----------
+    idx = cache.length
+    cc = jax.lax.dynamic_update_slice_in_dim(cache.k, c_kv.astype(cache.k.dtype), idx, axis=1)
+    cr = jax.lax.dynamic_update_slice_in_dim(cache.v, k_rope.astype(cache.v.dtype), idx, axis=1)
+    s = cc.shape[1]
+    # absorb W_uk: q_c[b,t,h,R] = q_nope . W_uk[h]  (W_uk from wk_b kernel)
+    wk_b = p["wk_b"]["kernel"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bthd,rhd->bthr", q_nope, wk_b)
+    logits = (
+        jnp.einsum("bthr,bsr->bhts", q_c, cc)
+        + jnp.einsum("bthd,bsd->bhts", q_rope, cr)
+    ).astype(jnp.float32) * scale
+    rows = idx + jnp.arange(t)
+    mask = jnp.arange(s)[None, :] <= rows[:, None]  # (t, s) causal
+    logits = jnp.where(mask[None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhts,bsr->bthr", probs, cc)  # (B, T, H, R)
+    # absorb W_uv into the output projection
+    wv_b = p["wv_b"]["kernel"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bthr,rhe->bthe", ctx, wv_b).reshape(b, t, h * m.v_head_dim)
+    new_cache = KVCache(k=cc, v=cr, length=idx + t)
+    return L.linear(p["wo"], out), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    m = cfg.mla
+    return KVCache(
+        k=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        v=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        length=jnp.asarray(0, jnp.int32),
+    )
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> L.Params:
+    return init_mla(key, cfg, dtype) if cfg.attention == "mla" else init_gqa(key, cfg, dtype)
+
+
+def attention_fwd(p, cfg, x, positions, cache=None, *, causal: bool = True):
+    if cfg.attention == "mla":
+        return mla_fwd(p, cfg, x, positions, cache)
+    return gqa_fwd(p, cfg, x, positions, cache, causal=causal)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    if cfg.attention == "mla":
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_gqa_cache(cfg, batch, max_len, dtype)

@@ -1,0 +1,105 @@
+"""Block compositions: pre-norm decoder block (dense/MoE), Mamba2 block
+wrapper, and the Zamba2 shared-attention hybrid pattern."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+
+
+# ------------------------------------------------------- decoder block ----
+
+
+def init_decoder_block(key, cfg: ModelConfig, dtype, *, use_moe: bool) -> L.Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": A.init_attention(ks[0], cfg, dtype),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if use_moe:
+        p["moe"] = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn, dtype)
+    return p
+
+
+def decoder_block_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: A.KVCache | None = None,
+    *,
+    causal: bool = True,
+) -> tuple[jax.Array, A.KVCache | None, MOE.MoEAux | None]:
+    h = L.norm_fwd(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, new_cache = A.attention_fwd(p["attn"], cfg, h, positions, cache, causal=causal)
+    x = x + attn_out
+    h = L.norm_fwd(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    aux = None
+    if "moe" in p:
+        ffn_out, aux = MOE.moe_fwd(p["moe"], cfg, h)
+    else:
+        ffn_out = L.ffn_fwd(p["ffn"], h, cfg.ffn)
+    return x + ffn_out, new_cache, aux
+
+
+# ------------------------------------------------------- mamba2 block -----
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> L.Params:
+    return {
+        "ln": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "mamba": M.init_mamba2(key, cfg, dtype),
+    }
+
+
+def mamba_block_fwd(p, cfg, x, state: M.SSMState | None = None):
+    h = L.norm_fwd(p["ln"], x, cfg.norm, cfg.norm_eps)
+    out, new_state = M.mamba2_fwd(p["mamba"], cfg, h, state)
+    return x + out, new_state
+
+
+# -------------------------------------------------- zamba2 shared block ---
+#
+# One transformer block whose weights are shared across all its applications
+# (every ``hybrid.shared_every`` backbone layers).  Its input is
+# concat(hidden, initial_embedding) projected down (the Zamba2 concatenated
+# residual), its output added back to the backbone stream.
+
+
+def init_shared_block(key, cfg: ModelConfig, dtype) -> L.Params:
+    ks = jax.random.split(key, 3)
+    sub = ModelConfig(
+        name=cfg.name + "-shared", family="dense",
+        n_layers=1, d_model=cfg.d_model, n_heads=cfg.hybrid.shared_block_heads,
+        n_kv_heads=cfg.hybrid.shared_block_heads, d_ff=cfg.d_ff,
+        vocab_size=cfg.vocab_size, norm=cfg.norm, norm_eps=cfg.norm_eps,
+        ffn=cfg.ffn, rope_theta=cfg.rope_theta, dtype=cfg.dtype,
+    )
+    return {
+        "w_concat": L.init_linear(ks[0], 2 * cfg.d_model, cfg.d_model, dtype),
+        "block": init_decoder_block(ks[1], sub, dtype, use_moe=False),
+        "_sub_heads": jnp.zeros((0,)),  # marker leaf (keeps tree static)
+    }
+
+
+def shared_block_fwd(p, cfg: ModelConfig, x, emb0, positions, cache: A.KVCache | None = None):
+    sub = ModelConfig(
+        name=cfg.name + "-shared", family="dense",
+        n_layers=1, d_model=cfg.d_model, n_heads=cfg.hybrid.shared_block_heads,
+        n_kv_heads=cfg.hybrid.shared_block_heads, d_ff=cfg.d_ff,
+        vocab_size=cfg.vocab_size, norm=cfg.norm, norm_eps=cfg.norm_eps,
+        ffn=cfg.ffn, rope_theta=cfg.rope_theta, dtype=cfg.dtype,
+    )
+    h = L.linear(p["w_concat"], jnp.concatenate([x, emb0], axis=-1))
+    out, new_cache, _ = decoder_block_fwd(p["block"], sub, h, positions, cache)
+    return x + out, new_cache

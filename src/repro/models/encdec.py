@@ -1,0 +1,258 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, T_enc, D) straight into the encoder.
+Encoder blocks are bidirectional (layernorm + GELU FFN); decoder blocks add
+cross-attention to the encoder memory.  Positions are learned embeddings
+(rope_fraction = 0 in the whisper config).
+
+Decode state: per-layer self-attn KV cache + the per-layer cross K/V
+(computed once from the encoder memory at prefill).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+MAX_DEC_POS = 32_832  # learned decoder positions (whisper: 448; decode_32k needs 32768)
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype) -> L.Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_linear(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": L.init_linear(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": L.init_linear(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": L.init_linear(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+
+
+def cross_attention_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, Tq, D) decoder stream
+    memory: jax.Array | None,  # (B, Tm, D) encoder output (prefill)
+    kv: tuple[jax.Array, jax.Array] | None,  # precomputed cross K/V (decode)
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = L.linear(p["wq"], x).reshape(b, t, cfg.n_heads, hd)
+    if kv is None:
+        k = L.linear(p["wk"], memory).reshape(b, memory.shape[1], cfg.n_kv_heads, hd)
+        v = L.linear(p["wv"], memory).reshape(b, memory.shape[1], cfg.n_kv_heads, hd)
+    else:
+        k, v = kv
+    out = _full_attention(q, k, v, 1.0 / math.sqrt(hd))
+    return L.linear(p["wo"], out.reshape(b, t, cfg.n_heads * hd)), (k, v)
+
+
+def _full_attention(q, k, v, scale):
+    b, t, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, hd)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshe->bthge", probs.astype(v.dtype), v)
+    return out.reshape(b, t, h, hd)
+
+
+# ------------------------------------------------------------- encoder ----
+
+
+def init_encoder_block(key, cfg: ModelConfig, dtype) -> L.Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": A.init_gqa(ks[0], cfg, dtype),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn, dtype),
+    }
+
+
+def encoder_block_fwd(p, cfg, x, positions):
+    h = L.norm_fwd(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, _ = A.gqa_fwd(p["attn"], cfg, h, positions, causal=False)
+    x = x + attn_out
+    h = L.norm_fwd(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + L.ffn_fwd(p["ffn"], h, cfg.ffn)
+
+
+# ------------------------------------------------------------- decoder ----
+
+
+def init_decoder_block(key, cfg: ModelConfig, dtype) -> L.Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": A.init_gqa(ks[0], cfg, dtype),
+        "ln_x": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "xattn": init_cross_attention(ks[1], cfg, dtype),
+        "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "ffn": L.init_ffn(ks[2], cfg.d_model, cfg.d_ff, cfg.ffn, dtype),
+    }
+
+
+def decoder_block_fwd(p, cfg, x, positions, memory=None, self_cache=None, cross_kv=None):
+    h = L.norm_fwd(p["ln1"], x, cfg.norm, cfg.norm_eps)
+    attn_out, new_cache = A.gqa_fwd(p["attn"], cfg, h, positions, self_cache)
+    x = x + attn_out
+    h = L.norm_fwd(p["ln_x"], x, cfg.norm, cfg.norm_eps)
+    xout, new_cross = cross_attention_fwd(p["xattn"], cfg, h, memory, cross_kv)
+    x = x + xout
+    h = L.norm_fwd(p["ln2"], x, cfg.norm, cfg.norm_eps)
+    return x + L.ffn_fwd(p["ffn"], h, cfg.ffn), new_cache, new_cross
+
+
+# ------------------------------------------------------------ full model --
+
+
+def init(key, cfg: ModelConfig) -> L.Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "dec_pos": L.truncated_normal(ks[1], (MAX_DEC_POS, cfg.d_model), 0.02, dtype),
+        "enc_blocks": T._stack_init(
+            ks[2], cfg.encdec.encoder_layers, lambda k: init_encoder_block(k, cfg, dtype)
+        ),
+        "ln_enc": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "dec_blocks": T._stack_init(
+            ks[3], cfg.n_layers, lambda k: init_decoder_block(k, cfg, dtype)
+        ),
+        "ln_f": L.init_norm(cfg.d_model, cfg.norm, dtype),
+        "lm_head": L.init_linear(ks[4], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def encode(p, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, D) stub-frontend embeddings -> encoder memory."""
+    b, t, _ = frames.shape
+    # sinusoidal positions (whisper encoder)
+    pos = jnp.arange(t)[:, None]
+    dim = jnp.arange(cfg.d_model // 2)[None, :]
+    inv = jnp.exp(-math.log(10000.0) * dim / (cfg.d_model // 2))
+    pe = jnp.concatenate([jnp.sin(pos * inv), jnp.cos(pos * inv)], axis=-1)
+    x = frames + pe[None].astype(frames.dtype)
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    from repro.sharding.rules import constrain_activations
+
+    def body(h, bp):
+        return constrain_activations(encoder_block_fwd(bp, cfg, constrain_activations(h), positions)), None
+
+    f = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(f, x, p["enc_blocks"])
+    return L.norm_fwd(p["ln_enc"], x, cfg.norm, cfg.norm_eps)
+
+
+def forward(
+    p,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, T_dec)
+    frames: jax.Array,  # (B, T_enc, D)
+) -> T.ForwardOut:
+    memory = encode(p, cfg, frames)
+    b, t = tokens.shape
+    x = L.embed(p["embed"], tokens) + p["dec_pos"][None, :t]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+
+    from repro.sharding.rules import constrain_activations
+
+    def body(h, bp):
+        h2, _, _ = decoder_block_fwd(bp, cfg, constrain_activations(h), positions, memory=memory)
+        return constrain_activations(h2), None
+
+    f = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(f, x, p["dec_blocks"])
+    h_final = L.norm_fwd(p["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = T._readout(p, cfg, h_final)
+    return T.ForwardOut(logits=logits, aux_losses={}, mtp_logits=None)
+
+
+def lm_loss(p, cfg, tokens, labels, frames):
+    out = forward(p, cfg, tokens, frames)
+    loss, denom = T._xent(out.logits, labels)
+    return loss, {"lm_loss": loss, "tokens": denom, "total_loss": loss}
+
+
+class EncDecState(NamedTuple):
+    self_kv: A.KVCache  # stacked over layers
+    cross_k: jax.Array  # (L, B, Tm, Hkv, hd)
+    cross_v: jax.Array
+
+
+def init_decode_state(p, cfg: ModelConfig, frames: jax.Array, batch: int, max_len: int) -> EncDecState:
+    """Encode once and precompute per-layer cross K/V."""
+    dtype = jnp.dtype(cfg.dtype)
+    memory = encode(p, cfg, frames)
+    hd = cfg.resolved_head_dim
+    b, tm, _ = memory.shape
+
+    def cross_kv(bp):
+        k = L.linear(bp["xattn"]["wk"], memory).reshape(b, tm, cfg.n_kv_heads, hd)
+        v = L.linear(bp["xattn"]["wv"], memory).reshape(b, tm, cfg.n_kv_heads, hd)
+        return k, v
+
+    ck, cv = jax.vmap(cross_kv)(p["dec_blocks"])
+    kv = A.init_gqa_cache(cfg, batch, max_len, dtype)
+    stacked = A.KVCache(
+        k=jnp.zeros((cfg.n_layers,) + kv.k.shape, dtype),
+        v=jnp.zeros((cfg.n_layers,) + kv.v.shape, dtype),
+        length=jnp.asarray(0, jnp.int32),
+    )
+    return EncDecState(self_kv=stacked, cross_k=ck, cross_v=cv)
+
+
+def decode_step(p, cfg: ModelConfig, tokens: jax.Array, state: EncDecState, pos_offset,
+                *, prefill: bool = False):
+    b, t = tokens.shape
+    x = L.embed(p["embed"], tokens) + jax.lax.dynamic_slice_in_dim(
+        p["dec_pos"], pos_offset, t, axis=0
+    )[None]
+    positions = pos_offset + jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    kvs = state.self_kv
+
+    from repro.sharding.rules import constrain_activations
+
+    def body(h, inp):
+        bp, k_l, v_l, ck_l, cv_l = inp
+        if prefill:
+            h2, fresh, _ = decoder_block_fwd(
+                bp, cfg, constrain_activations(h), positions,
+                self_cache=None, cross_kv=(ck_l, cv_l)
+            )
+            k_n = jax.lax.dynamic_update_slice_in_dim(
+                k_l, fresh.k.astype(k_l.dtype), kvs.length, axis=1)
+            v_n = jax.lax.dynamic_update_slice_in_dim(
+                v_l, fresh.v.astype(v_l.dtype), kvs.length, axis=1)
+            return constrain_activations(h2), (k_n, v_n)
+        cache_l = A.KVCache(k=k_l, v=v_l, length=kvs.length)
+        h2, nc, _ = decoder_block_fwd(
+            bp, cfg, constrain_activations(h), positions,
+            self_cache=cache_l, cross_kv=(ck_l, cv_l)
+        )
+        return constrain_activations(h2), (nc.k, nc.v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (p["dec_blocks"], kvs.k, kvs.v, state.cross_k, state.cross_v)
+    )
+    h_final = L.norm_fwd(p["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = T._readout(p, cfg, h_final)
+    new_state = EncDecState(
+        self_kv=A.KVCache(k=ks, v=vs, length=kvs.length + t),
+        cross_k=state.cross_k, cross_v=state.cross_v,
+    )
+    return logits, new_state

@@ -1,0 +1,137 @@
+"""Shared neural-net layers (pure functions over param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; ``init_*`` builds them,
+    ``*_fwd``/apply functions consume them.
+  * leaf names are load-bearing: ``repro.sharding.rules`` pattern-matches
+    them to assign PartitionSpecs (MaxText-style logical axes).
+  * activations are computed in the config dtype; normalization and
+    softmax statistics in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+Params = dict
+
+
+def truncated_normal(key, shape, scale: float, dtype) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, *, bias: bool = False, name_scale: float | None = None) -> Params:
+    scale = name_scale if name_scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"kernel": truncated_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["kernel"]
+    if "bias" in p:
+        y = y + p["bias"]
+    return y
+
+
+# ------------------------------------------------------------------- norms
+
+
+def init_norm(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_fwd(p: Params, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return ops.rmsnorm(x, p["scale"], eps)
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape (..., T, head_dim//2) for integer positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array, fraction: float = 1.0) -> jax.Array:
+    """Rotate the first ``fraction`` of the head dim (chatglm: 0.5).
+
+    x: (B, T, H, D); sin/cos: (B?, T, rot//2) broadcastable.
+    Pairing is interleaved-free (llama-style half-split within the rotated
+    span).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    # sin/cos arrive as (T, half') or (B, T, half') -> insert a head axis.
+    s = sin[..., :half][..., None, :]
+    c = cos[..., :half][..., None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * c - xf2 * s
+    o2 = xf2 * c + xf1 * s
+    return jnp.concatenate([o1.astype(x.dtype), o2.astype(x.dtype), x_pass], axis=-1)
+
+
+# --------------------------------------------------------------------- FFN
+
+
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_linear(ks[0], d_model, d_ff, dtype),
+            "w_up": init_linear(ks[1], d_model, d_ff, dtype),
+            "w_down": init_linear(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": init_linear(ks[0], d_model, d_ff, dtype),
+        "w_down": init_linear(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def ffn_fwd(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return linear(p["w_down"], jax.nn.silu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+    if kind == "geglu":
+        return linear(p["w_down"], jax.nn.gelu(linear(p["w_gate"], x)) * linear(p["w_up"], x))
+    return linear(p["w_down"], jax.nn.gelu(linear(p["w_up"], x)))
+
+
+# --------------------------------------------------------------- embedding
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    # GPT-style 0.02: keeps tied-readout logits O(1) at init.
+    return {"embedding": truncated_normal(key, (vocab, d_model), 0.02, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return p["embedding"][tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    """Tied readout: logits = x @ E^T (float32 for the softmax)."""
+    return (x @ p["embedding"].T.astype(x.dtype)).astype(jnp.float32)

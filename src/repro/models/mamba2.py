@@ -1,0 +1,163 @@
+"""Mamba-2 (SSD) block — the zamba2 backbone.
+
+Implements the state-space dual form with scalar-per-head decay:
+
+    h_t = a_t * h_{t-1} + b_t x_t^T     (per head: state (d_state, head_dim))
+    y_t = c_t^T h_t  + D x_t
+
+computed chunkwise (intra-chunk quadratic + inter-chunk recurrence), the
+standard SSD algorithm, entirely in jnp (scan over chunks).  A causal
+short conv (d_conv) precedes the SSM as in the reference architecture.
+
+Decode carries (conv_state (B, d_conv-1, d_inner+2*d_state), ssm_state
+(B, H, d_state, head_dim)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, conv_channels)
+    ssm: jax.Array  # (B, H, d_state, head_dim) fp32
+    length: jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.d_state
+    return s, d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype) -> L.Params:
+    s, d_inner, n_heads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": L.init_linear(ks[0], d, 2 * d_inner + 2 * s.d_state + n_heads, dtype),
+        "conv": {"kernel": L.truncated_normal(ks[1], (s.d_conv, conv_ch), 0.5, dtype)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "out_norm": L.init_norm(d_inner, "rmsnorm", dtype),
+        "w_out": L.init_linear(ks[2], d_inner, d, dtype),
+    }
+
+
+def _ssd_chunked(x, a, b, c, chunk: int, h0: jax.Array):
+    """SSD scan.  x: (B, T, H, P); a: (B, T, H) in (0,1]; b,c: (B, T, N).
+
+    Returns y (B, T, H, P), h_final (B, H, N, P).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    pad = -t % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // chunk
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+
+    la = jnp.log(jnp.maximum(ac, 1e-20)).astype(jnp.float32)  # (B,nc,L,H)
+    cum = jnp.cumsum(la, axis=2)  # inclusive cumulative log-decay
+
+    # intra-chunk: y_intra[t] = sum_{s<=t} decay(s->t) * (c_t.b_s) x_s
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L_t,L_s,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # Clamp BEFORE exp: masked (t<s) entries have dec>0 and would overflow
+    # to inf, poisoning gradients through the where (0 * inf = NaN in vjp).
+    gamma = jnp.exp(jnp.where(mask, dec, -1e30))
+    cb = jnp.einsum("bgtn,bgsn->bgts", cc, bc)  # (B,nc,L,L)
+    y_intra = jnp.einsum("bgts,bgtsh,bgshp->bgthp", cb, gamma, xc.astype(jnp.float32))
+
+    # chunk summaries: state contribution of each chunk
+    tail = cum[:, :, -1:, :] - cum  # decay from step s to chunk end
+    bx = jnp.einsum("bgsn,bgshp,bgsh->bghnp", bc, xc.astype(jnp.float32), jnp.exp(tail))
+    a_chunk = jnp.exp(cum[:, :, -1, :])  # (B,nc,H) total chunk decay
+
+    def scan_chunks(hprev, inp):
+        bx_g, a_g = inp
+        hnew = hprev * a_g[..., None, None] + bx_g
+        return hnew, hprev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        scan_chunks,
+        h0.astype(jnp.float32),
+        (jnp.moveaxis(bx, 1, 0), jnp.moveaxis(a_chunk, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,N,P) state entering chunk
+
+    # inter-chunk: y_inter[t] = (c_t decay(0->t)) . h_prev
+    y_inter = jnp.einsum(
+        "bgtn,bgth,bghnp->bgthp", cc, jnp.exp(cum), h_prevs
+    )
+    y = (y_intra + y_inter).reshape(bsz, nc * chunk, h, p)[:, :t]
+    return y, h_final
+
+
+def mamba2_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, T, D)
+    state: SSMState | None = None,
+) -> tuple[jax.Array, SSMState | None]:
+    s, d_inner, n_heads, conv_ch = _dims(cfg)
+    bsz, t, _ = x.shape
+
+    zxbcdt = L.linear(p["w_in"], x)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * s.d_state], axis=-1)
+    # wait: layout is [z, x, B, C, dt] with x,B,C going through the conv
+    # xbc = [x (d_inner), B (N), C (N)]
+    if state is None:
+        conv_in = xbc
+        prev = jnp.zeros((bsz, s.d_conv - 1, conv_ch), xbc.dtype)
+        h0 = jnp.zeros((bsz, n_heads, s.d_state, s.head_dim), jnp.float32)
+    else:
+        prev = state.conv
+        conv_in = xbc
+        h0 = state.ssm
+
+    full = jnp.concatenate([prev, conv_in], axis=1)  # (B, T+dc-1, CH)
+    kernel = p["conv"]["kernel"]  # (dc, CH)
+    idx = jnp.arange(t)[:, None] + jnp.arange(s.d_conv)[None, :]  # (T, dc)
+    windows = full[:, idx, :]  # (B, T, dc, CH)
+    conv_out = jax.nn.silu(jnp.einsum("btkc,kc->btc", windows, kernel))
+    new_conv = full[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else full[:, :0, :]
+
+    xs, b_in, c_in = jnp.split(conv_out, [d_inner, d_inner + s.d_state], axis=-1)
+    xs = xs.reshape(bsz, t, n_heads, s.head_dim)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a = jnp.exp(-dt_act * jnp.exp(p["a_log"]))  # decay in (0,1)
+    x_scaled = xs.astype(jnp.float32) * dt_act[..., None]
+
+    y, h_f = _ssd_chunked(x_scaled, a, b_in.astype(jnp.float32), c_in.astype(jnp.float32), s.chunk, h0)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = L.norm_fwd(p["out_norm"], y, "rmsnorm", cfg.norm_eps)
+    out = L.linear(p["w_out"], y)
+    length = (state.length if state is not None else jnp.asarray(0, jnp.int32)) + t
+    return out, SSMState(conv=new_conv, ssm=h_f, length=length)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s, d_inner, n_heads, conv_ch = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, n_heads, s.d_state, s.head_dim), jnp.float32),
+        length=jnp.asarray(0, jnp.int32),
+    )

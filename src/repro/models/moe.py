@@ -1,0 +1,179 @@
+"""Mixture-of-experts FFN (DeepSeek-V2/V3 style).
+
+  * fine-grained routed experts + shared experts (DeepSeekMoE)
+  * two routers: softmax top-k with load-balance aux loss (V2) and
+    sigmoid scoring with a learned-bias aux-loss-free balancer (V3 —
+    the bias enters routing only, gates use the raw scores)
+  * SPMD-friendly capacity-bounded dispatch: tokens -> (expert, slot)
+    one-hot einsum, experts sharded over the ``model`` mesh axis (EP);
+    the dispatch/combine einsums lower to all-to-alls under GSPMD.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array
+    router_z_loss: jax.Array
+    expert_load: jax.Array  # (E,) fraction of tokens routed per expert
+    dropped_fraction: jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> L.Params:
+    mo = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    e = mo.n_experts
+    de = mo.d_expert
+
+    def stack_init(k, d_in, d_out):
+        kk = jax.random.split(k, e)
+        return jnp.stack([L.init_linear(ki, d_in, d_out, dtype)["kernel"] for ki in kk])
+
+    p: L.Params = {
+        "router": {
+            "kernel": L.truncated_normal(ks[0], (d, e), 0.02, jnp.float32),
+        },
+        "experts": {
+            "w_gate": stack_init(ks[1], d, de),
+            "w_up": stack_init(ks[2], d, de),
+            "w_down": stack_init(ks[3], de, d),
+        },
+    }
+    if mo.router == "sigmoid_bias":
+        # aux-loss-free balancing bias (updated outside the gradient path)
+        p["router"]["bias"] = jnp.zeros((e,), jnp.float32)
+    if mo.n_shared_experts:
+        p["shared"] = L.init_ffn(
+            jax.random.fold_in(key, 7), d, de * mo.n_shared_experts, cfg.ffn, dtype
+        )
+    return p
+
+
+def _route(p, cfg: ModelConfig, x_flat: jax.Array):
+    """-> (weights (N, k), indices (N, k), scores (N, E), logits)."""
+    mo = cfg.moe
+    logits = (x_flat.astype(jnp.float32)) @ p["router"]["kernel"]  # (N, E)
+    if mo.router == "sigmoid_bias":
+        scores = jax.nn.sigmoid(logits)
+        select = scores + p["router"]["bias"][None, :]
+        _, idx = jax.lax.top_k(select, mo.experts_per_token)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(scores, mo.experts_per_token)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    return w, idx, scores, logits
+
+
+def moe_fwd(
+    p: L.Params, cfg: ModelConfig, x: jax.Array, *, group_size: int = 256
+) -> tuple[jax.Array, MoEAux]:
+    """GShard-style grouped capacity dispatch (SPMD-exact, EP-friendly).
+
+    Tokens are tiled into groups of ``group_size``; capacity and slot
+    assignment are per-group, so dispatch/combine tensors are
+    O(S * E * C) per group with C = cf * S * k / E — linear in tokens
+    overall (a flat one-hot dispatch is quadratic and blows up at the 1M-
+    token prefill shapes).  Groups map to the data axis and experts to the
+    model axis; the (G, E, C, d) <-> (E, G*C, d) reshape around the expert
+    FFN is where GSPMD inserts the all-to-alls.
+    """
+    mo = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e = mo.n_experts
+    k = mo.experts_per_token
+    x_flat = x.reshape(n, d)
+
+    w, idx, scores, logits = _route(p, cfg, x_flat)
+
+    s = min(group_size, n)
+    pad = -n % s
+    if pad:
+        x_g = jnp.concatenate([x_flat, jnp.zeros((pad, d), x.dtype)])
+        idx_g = jnp.concatenate([idx, jnp.zeros((pad, k), idx.dtype)])
+        w_g = jnp.concatenate([w, jnp.zeros((pad, k), w.dtype)])
+        valid = jnp.concatenate([jnp.ones((n,), x.dtype), jnp.zeros((pad,), x.dtype)])
+    else:
+        x_g, idx_g, w_g = x_flat, idx, w
+        valid = jnp.ones((n,), x.dtype)
+    g = (n + pad) // s
+    capacity = max(int(mo.capacity_factor * s * k / e), k)
+
+    xg = x_g.reshape(g, s, d)
+    idxg = idx_g.reshape(g, s, k)
+    wg = (w_g * valid[:, None]).reshape(g, s, k)
+
+    # per-group slot assignment
+    onehot = jax.nn.one_hot(idxg, e, dtype=jnp.int32)  # (G, S, k, E)
+    flatoh = onehot.reshape(g, s * k, e)
+    pre = jnp.cumsum(flatoh, axis=1) - flatoh  # tokens ahead in this expert
+    slot = jnp.sum(pre.reshape(g, s, k, e) * onehot, axis=-1)  # (G, S, k)
+    keep = slot < capacity
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    slot_oh = jax.nn.one_hot(jnp.where(keep, slot, capacity), capacity, dtype=x.dtype)
+    oh = onehot.astype(x.dtype)
+    # dispatch: (G, S, E, C); combine adds the gate weights
+    disp = jnp.einsum("gske,gskc->gsec", oh, slot_oh)
+    comb = jnp.einsum("gske,gskc->gsec", oh * wg[..., None].astype(x.dtype), slot_oh)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, disp)  # (G, E, C, d)
+    # EP boundary: groups ride "data", experts ride "model" — this reshape
+    # is the all-to-all under GSPMD.
+    xe = xe.transpose(1, 0, 2, 3).reshape(e, g * capacity, d)
+
+    we = p["experts"]
+
+    def expert(xc, wgate, wup, wdown):
+        if cfg.ffn == "swiglu":
+            h = jax.nn.silu(xc @ wgate) * (xc @ wup)
+        else:
+            h = jax.nn.gelu(xc @ wgate) * (xc @ wup)
+        return h @ wdown
+
+    ye = jax.vmap(expert)(xe, we["w_gate"], we["w_up"], we["w_down"])  # (E, G*C, d)
+    ye = ye.reshape(e, g, capacity, d).transpose(1, 0, 2, 3)  # (G, E, C, d)
+    y = jnp.einsum("gecd,gsec->gsd", ye, comb)
+    y = y.reshape(g * s, d)[:n]
+
+    if mo.n_shared_experts:
+        y = y + L.ffn_fwd(p["shared"], x_flat, cfg.ffn)
+
+    # aux losses (over real tokens)
+    load = jnp.mean(
+        jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(axis=1), axis=0
+    )  # (E,) expected assignments per token
+    importance = jnp.mean(scores, axis=0)
+    lb = e * jnp.sum(load / k * importance) if mo.router == "softmax_topk" else jnp.asarray(0.0)
+    zl = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = MoEAux(
+        load_balance_loss=lb.astype(jnp.float32),
+        router_z_loss=zl.astype(jnp.float32),
+        expert_load=load,
+        dropped_fraction=dropped,
+    )
+    return y.reshape(b, t, d), aux
+
+
+def update_router_bias(p: L.Params, cfg: ModelConfig, expert_load: jax.Array, lr: float = 1e-3) -> L.Params:
+    """V3 aux-loss-free balancer: nudge the routing bias against load skew
+    (outside the gradient path; called from the train step)."""
+    if "bias" not in p["router"]:
+        return p
+    mo = cfg.moe
+    target = mo.experts_per_token / mo.n_experts
+    err = expert_load - target
+    new_bias = p["router"]["bias"] - lr * jnp.sign(err)
+    out = dict(p)
+    out["router"] = dict(p["router"], bias=new_bias)
+    return out

@@ -1,0 +1,142 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent token-shift
+mixing + data-dependent decay time-mix, and the squared-ReLU channel-mix.
+
+The recurrence itself runs through ``kernels.ops.rwkv6_scan`` (Pallas on
+TPU, jnp oracle elsewhere).  Decode carries (shift_tm, shift_cm, wkv state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jax.Array  # (B, 1, D) last token for time-mix token shift
+    shift_cm: jax.Array  # (B, 1, D) last token for channel-mix token shift
+    wkv: jax.Array  # (B, H, hd, hd) recurrence state
+    length: jax.Array
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    hd = cfg.rwkv.head_dim
+    return cfg.d_model // hd, hd
+
+
+def init_rwkv6(key, cfg: ModelConfig, dtype) -> L.Params:
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    r = cfg.rwkv
+    ks = jax.random.split(key, 16)
+    lora = lambda k, rank, out: {
+        "a": L.truncated_normal(jax.random.fold_in(k, 0), (d, rank), 0.02, dtype),
+        "b": L.truncated_normal(jax.random.fold_in(k, 1), (rank, out), 0.02, dtype),
+    }
+    return {
+        "time": {
+            # token-shift base mixers (mu) + data-dependent LoRA deltas
+            "mu_base": L.truncated_normal(ks[0], (5, d), 0.02, dtype),
+            "mix_lora_a": L.truncated_normal(ks[1], (d, 5 * r.mix_lora), 0.02, dtype),
+            "mix_lora_b": L.truncated_normal(ks[2], (5, r.mix_lora, d), 0.02, dtype),
+            "wr": L.init_linear(ks[3], d, d, dtype),
+            "wk": L.init_linear(ks[4], d, d, dtype),
+            "wv": L.init_linear(ks[5], d, d, dtype),
+            "wg": L.init_linear(ks[6], d, d, dtype),
+            "decay_base": jnp.full((d,), -6.0, jnp.float32),
+            "decay_lora": lora(ks[7], r.decay_lora, d),
+            "u_bonus": L.truncated_normal(ks[8], (h, hd), 0.1, jnp.float32),
+            "ln_x": L.init_norm(d, "rmsnorm", dtype),  # group-norm stand-in
+            "wo": L.init_linear(ks[9], d, d, dtype),
+        },
+        "channel": {
+            "mu_k": L.truncated_normal(ks[10], (d,), 0.02, dtype),
+            "mu_r": L.truncated_normal(ks[11], (d,), 0.02, dtype),
+            "wk": L.init_linear(ks[12], d, cfg.d_ff, dtype),
+            "wv": L.init_linear(ks[13], cfg.d_ff, d, dtype),
+            "wr": L.init_linear(ks[14], d, d, dtype),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x shifted right by one: [prev, x_0, ..., x_{T-2}]."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def time_mix_fwd(p, cfg, x, state: RWKVState | None):
+    b, t, d = x.shape
+    h, hd = _heads(cfg)
+    prev = state.shift_tm if state is not None else jnp.zeros((b, 1, d), x.dtype)
+    xs = _token_shift(x, prev)
+    delta = xs - x
+
+    # data-dependent mixing coefficients (5 heads: r, k, v, w, g)
+    lora_in = jnp.tanh(x @ p["mix_lora_a"]).reshape(b, t, 5, -1)
+    mix = p["mu_base"][None, None] + jnp.einsum("btfr,frd->btfd", lora_in, p["mix_lora_b"])
+    xr, xk, xv, xw, xg = [x + delta * mix[:, :, i] for i in range(5)]
+
+    r = L.linear(p["wr"], xr).reshape(b, t, h, hd)
+    k = L.linear(p["wk"], xk).reshape(b, t, h, hd)
+    v = L.linear(p["wv"], xv).reshape(b, t, h, hd)
+    g = jax.nn.silu(L.linear(p["wg"], xg))
+
+    dec_in = jnp.tanh(xw @ p["decay_lora"]["a"]) @ p["decay_lora"]["b"]
+    w_log = p["decay_base"][None, None] + dec_in.astype(jnp.float32)  # (B,T,D)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, t, h, hd)  # decay in (0,1)
+
+    wkv0 = state.wkv if state is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+    out, wkv_f = ops.rwkv6_scan(
+        r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        w.astype(x.dtype).transpose(0, 2, 1, 3), p["u_bonus"].astype(x.dtype), wkv0,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    out = L.norm_fwd(p["ln_x"], out, "rmsnorm", cfg.norm_eps) * g
+    return L.linear(p["wo"], out), x[:, -1:], wkv_f
+
+
+def channel_mix_fwd(p, cfg, x, state: RWKVState | None):
+    b, t, d = x.shape
+    prev = state.shift_cm if state is not None else jnp.zeros((b, 1, d), x.dtype)
+    xs = _token_shift(x, prev)
+    delta = xs - x
+    xk = x + delta * p["mu_k"][None, None]
+    xr = x + delta * p["mu_r"][None, None]
+    k = L.linear(p["wk"], xk)
+    k = jnp.square(jax.nn.relu(k))
+    kv = L.linear(p["wv"], k)
+    return jax.nn.sigmoid(L.linear(p["wr"], xr)) * kv, x[:, -1:]
+
+
+def rwkv6_block_fwd(
+    p: L.Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    norms: L.Params,
+    state: RWKVState | None = None,
+) -> tuple[jax.Array, RWKVState]:
+    h1 = L.norm_fwd(norms["ln1"], x, cfg.norm, cfg.norm_eps)
+    tm, shift_tm, wkv_f = time_mix_fwd(p["time"], cfg, h1, state)
+    x = x + tm
+    h2 = L.norm_fwd(norms["ln2"], x, cfg.norm, cfg.norm_eps)
+    cm, shift_cm = channel_mix_fwd(p["channel"], cfg, h2, state)
+    x = x + cm
+    length = (state.length if state is not None else jnp.asarray(0, jnp.int32)) + x.shape[1]
+    # NOTE: shift states must hold the NORMED stream the mixes consume.
+    new_state = RWKVState(shift_tm=h1[:, -1:], shift_cm=h2[:, -1:], wkv=wkv_f, length=length)
+    return x, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RWKVState:
+    h, hd = _heads(cfg)
+    d = cfg.d_model
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, 1, d), dtype),
+        shift_cm=jnp.zeros((batch, 1, d), dtype),
+        wkv=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        length=jnp.asarray(0, jnp.int32),
+    )

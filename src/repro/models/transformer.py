@@ -1,0 +1,409 @@
+"""Top-level language models for every assigned family.
+
+``init(key, cfg)`` builds the param pytree; ``forward(params, cfg, tokens)``
+returns logits (+aux); ``decode_step`` advances one token against a cache
+pytree.  Layers are scanned (``jax.lax.scan`` over stacked params) so HLO
+size and compile time are depth-independent — required for the 61-layer
+dry-runs — with ``jax.checkpoint`` (remat) around each block.
+
+Families:
+  dense / vlm        — homogeneous decoder blocks (chameleon = qk_norm)
+  moe                — leading dense layers + scanned MoE layers (deepseek)
+  ssm (rwkv6)        — scanned RWKV6 blocks
+  hybrid (zamba2)    — grouped scan: k Mamba2 layers per shared-attn visit
+  audio (whisper)    — see ``repro.models.encdec``
+
+MTP (deepseek-v3): one extra scanned-depth-1 block predicting token t+2
+from [h_final ; emb(t+1)] (simplified single-depth MTP head), used as an
+auxiliary loss during training only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+
+
+class ForwardOut(NamedTuple):
+    logits: jax.Array  # (B, T, V) float32
+    aux_losses: dict
+    mtp_logits: jax.Array | None
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(key, n: int, init_fn) -> L.Params:
+    """Initialize n copies of a block and stack leaves (scan layout)."""
+    keys = jax.random.split(key, n)
+    trees = [init_fn(k) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat == "block" else f
+
+
+# ============================================================ init ========
+
+
+def init(key, cfg: ModelConfig) -> L.Params:
+    dtype = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    p: L.Params = {
+        "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "ln_f": L.init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.init_linear(ks[1], cfg.d_model, cfg.padded_vocab, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: B.init_decoder_block(k, cfg, dtype, use_moe=False),
+        )
+    elif fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        p["dense_blocks"] = _stack_init(
+            ks[2], nd, lambda k: B.init_decoder_block(k, cfg, dtype, use_moe=False)
+        )
+        p["moe_blocks"] = _stack_init(
+            ks[3], cfg.n_layers - nd,
+            lambda k: B.init_decoder_block(k, cfg, dtype, use_moe=True),
+        )
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "proj": L.init_linear(ks[4], 2 * cfg.d_model, cfg.d_model, dtype),
+                "block": B.init_decoder_block(ks[5], cfg, dtype, use_moe=False),
+                "ln": L.init_norm(cfg.d_model, cfg.norm, dtype),
+            }
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: {
+                "ln1": L.init_norm(cfg.d_model, cfg.norm, dtype),
+                "ln2": L.init_norm(cfg.d_model, cfg.norm, dtype),
+                **R.init_rwkv6(k, cfg, dtype),
+            },
+        )
+    elif fam == "hybrid":
+        k_every = cfg.hybrid.shared_every
+        n_groups = cfg.n_layers // k_every
+        p["groups"] = _stack_init(
+            ks[2], n_groups,
+            lambda k: _stack_init(k, k_every, lambda kk: B.init_mamba_block(kk, cfg, dtype)),
+        )
+        p["shared"] = B.init_shared_block(ks[3], cfg, dtype)
+    else:
+        raise ValueError(f"family {fam} handled in repro.models.encdec")
+    return p
+
+
+# ========================================================= forward ========
+
+
+def forward(
+    p: L.Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, T) int32
+    *,
+    embeddings: jax.Array | None = None,  # modality-stub path (B, T, D)
+    collect_aux: bool = True,
+) -> ForwardOut:
+    b, t = tokens.shape[:2]
+    x = L.embed(p["embed"], tokens) if embeddings is None else embeddings
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    aux: dict = {}
+
+    from repro.sharding.rules import constrain_activations
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        def body(h, bp):
+            h2, _, _ = B.decoder_block_fwd(bp, cfg, constrain_activations(h), positions)
+            return constrain_activations(h2), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, p["blocks"])
+    elif fam == "moe":
+        def dense_body(h, bp):
+            h2, _, _ = B.decoder_block_fwd(bp, cfg, constrain_activations(h), positions)
+            return constrain_activations(h2), None
+
+        x, _ = jax.lax.scan(_maybe_remat(dense_body, cfg), x, p["dense_blocks"])
+
+        def moe_body(h, bp):
+            h2, _, a = B.decoder_block_fwd(bp, cfg, constrain_activations(h), positions)
+            h2 = constrain_activations(h2)
+            return h2, (a.load_balance_loss, a.router_z_loss, a.expert_load, a.dropped_fraction)
+
+        x, (lb, zl, load, drop) = jax.lax.scan(_maybe_remat(moe_body, cfg), x, p["moe_blocks"])
+        if collect_aux:
+            aux["load_balance"] = jnp.mean(lb) * cfg.moe.router_aux_weight
+            aux["router_z"] = jnp.mean(zl) * cfg.moe.router_z_weight
+            aux["expert_load"] = jnp.mean(load, axis=0)
+            aux["dropped_fraction"] = jnp.mean(drop)
+    elif fam == "ssm":
+        def rwkv_body(h, bp):
+            norms = {"ln1": bp["ln1"], "ln2": bp["ln2"]}
+            h2, _ = R.rwkv6_block_fwd({"time": bp["time"], "channel": bp["channel"]},
+                                      cfg, constrain_activations(h), norms, None)
+            return constrain_activations(h2), None
+
+        x, _ = jax.lax.scan(_maybe_remat(rwkv_body, cfg), x, p["blocks"])
+    elif fam == "hybrid":
+        emb0 = x
+
+        def group_body(h, gp):
+            def inner(hh, bp):
+                hh2, _ = B.mamba_block_fwd(bp, cfg, constrain_activations(hh))
+                return constrain_activations(hh2), None
+
+            h, _ = jax.lax.scan(inner, h, gp)
+            h, _ = B.shared_block_fwd(p["shared"], cfg, h, emb0, positions)
+            return h, None
+
+        x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x, p["groups"])
+    else:
+        raise ValueError(fam)
+
+    h_final = L.norm_fwd(p["ln_f"], x, cfg.norm, cfg.norm_eps)
+    logits = _readout(p, cfg, h_final)
+
+    mtp_logits = None
+    if cfg.mtp_depth and "mtp" in p and cfg.family == "moe":
+        # MTP: predict token t+2 from [h_t ; emb(token_{t+1})]
+        emb_next = jnp.roll(L.embed(p["embed"], tokens), -1, axis=1)
+        hm = L.linear(p["mtp"]["proj"], jnp.concatenate([h_final, emb_next], axis=-1))
+        hm, _, _ = B.decoder_block_fwd(p["mtp"]["block"], cfg, hm, positions)
+        hm = L.norm_fwd(p["mtp"]["ln"], hm, cfg.norm, cfg.norm_eps)
+        mtp_logits = _readout(p, cfg, hm)
+
+    return ForwardOut(logits=logits, aux_losses=aux, mtp_logits=mtp_logits)
+
+
+def _readout(p, cfg, h):
+    from repro.sharding.rules import maybe_constrain
+
+    if cfg.tie_embeddings:
+        logits = L.unembed(p["embed"], h)
+    else:
+        logits = L.linear(p["lm_head"], h).astype(jnp.float32)
+    # fp32 (B, T, V) is the largest activation in the program: keep vocab
+    # sharded on "model" and batch on "data" through the loss.
+    return maybe_constrain(logits, ("pod", "data"), None, "model")
+
+
+# ============================================================ loss ========
+
+
+def lm_loss(
+    p: L.Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, T)
+    labels: jax.Array,  # (B, T), -100 = ignore
+    *,
+    embeddings: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    out = forward(p, cfg, tokens, embeddings=embeddings)
+    loss, denom = _xent(out.logits, labels)
+    metrics = {"lm_loss": loss, "tokens": denom}
+    total = loss
+    for k, v in out.aux_losses.items():
+        if k in ("load_balance", "router_z"):
+            total = total + v
+        metrics[k] = v
+    if out.mtp_logits is not None:
+        mtp_labels = jnp.roll(labels, -1, axis=1).at[:, -1].set(-100)
+        mtp_loss, _ = _xent(out.mtp_logits, mtp_labels)
+        total = total + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["total_loss"] = total
+    return total, metrics
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # Label gather as a masked reduction over the vocab axis: unlike
+    # take_along_axis this stays partitioned when vocab is sharded on
+    # "model" (GSPMD reduces partial sums; a gather would all-gather the
+    # full fp32 logits onto every device — tens of GB at assigned shapes).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == safe[..., None], logits, 0.0), axis=-1
+    )
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom, denom
+
+
+# ====================================================== decode caches =====
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    """Per-layer cache pytree matching the forward structure."""
+    dtype = _dtype(cfg)
+    fam = cfg.family
+
+    def stacked_kv(n):
+        c = A.init_cache(cfg, batch, max_len, dtype)
+        return A.KVCache(
+            k=jnp.zeros((n,) + c.k.shape, dtype),
+            v=jnp.zeros((n,) + c.v.shape, dtype),
+            length=jnp.asarray(0, jnp.int32),
+        )
+
+    if fam in ("dense", "vlm"):
+        return {"blocks": stacked_kv(cfg.n_layers)}
+    if fam == "moe":
+        nd = cfg.moe.first_dense_layers
+        return {"dense": stacked_kv(nd), "moe": stacked_kv(cfg.n_layers - nd)}
+    if fam == "ssm":
+        s = R.init_rwkv_state(cfg, batch, dtype)
+        n = cfg.n_layers
+        return {
+            "blocks": R.RWKVState(
+                shift_tm=jnp.zeros((n,) + s.shift_tm.shape, dtype),
+                shift_cm=jnp.zeros((n,) + s.shift_cm.shape, dtype),
+                wkv=jnp.zeros((n,) + s.wkv.shape, jnp.float32),
+                length=jnp.asarray(0, jnp.int32),
+            )
+        }
+    if fam == "hybrid":
+        k_every = cfg.hybrid.shared_every
+        n_groups = cfg.n_layers // k_every
+        s = M.init_ssm_state(cfg, batch, dtype)
+        return {
+            "groups": M.SSMState(
+                conv=jnp.zeros((n_groups, k_every) + s.conv.shape, dtype),
+                ssm=jnp.zeros((n_groups, k_every) + s.ssm.shape, jnp.float32),
+                length=jnp.asarray(0, jnp.int32),
+            ),
+            "shared": stacked_kv(n_groups),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(
+    p: L.Params,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, T_new) — T_new=1 for decode, >1 for prefill
+    state: Any,
+    pos_offset: jax.Array,  # () int32 — absolute position of tokens[:, 0]
+    *,
+    prefill: bool = False,
+) -> tuple[jax.Array, Any]:
+    """Advance the model over tokens with caches; returns (logits, state).
+
+    ``prefill=True`` (static) computes attention through the training path
+    (query-chunked, O(chunk*T) memory) and then writes the fresh K/V into
+    the preallocated cache — the decode path's full (T x S) logits would be
+    tens of GB at the 32k prefill shapes.
+    """
+    b, t = tokens.shape
+    x = L.embed(p["embed"], tokens)
+    positions = pos_offset + jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    fam = cfg.family
+
+    from repro.sharding.rules import constrain_activations
+
+    def scan_kv(blocks_p, kvs: A.KVCache, h):
+        def body(carry, inp):
+            hh = carry
+            bp, k_l, v_l = inp
+            if prefill:
+                hh2, fresh, _ = B.decoder_block_fwd(
+                    bp, cfg, constrain_activations(hh), positions, None
+                )
+                k_n = jax.lax.dynamic_update_slice_in_dim(
+                    k_l, fresh.k.astype(k_l.dtype), kvs.length, axis=1
+                )
+                v_n = jax.lax.dynamic_update_slice_in_dim(
+                    v_l, fresh.v.astype(v_l.dtype), kvs.length, axis=1
+                )
+                return constrain_activations(hh2), (k_n, v_n)
+            cache_l = A.KVCache(k=k_l, v=v_l, length=kvs.length)
+            hh2, new_cache, _ = B.decoder_block_fwd(
+                bp, cfg, constrain_activations(hh), positions, cache_l
+            )
+            return constrain_activations(hh2), (new_cache.k, new_cache.v)
+
+        h, (ks, vs) = jax.lax.scan(body, h, (blocks_p, kvs.k, kvs.v))
+        return h, A.KVCache(k=ks, v=vs, length=kvs.length + t)
+
+    if fam in ("dense", "vlm"):
+        x, new_kv = scan_kv(p["blocks"], state["blocks"], x)
+        new_state = {"blocks": new_kv}
+    elif fam == "moe":
+        x, nd_kv = scan_kv(p["dense_blocks"], state["dense"], x)
+        x, mo_kv = scan_kv(p["moe_blocks"], state["moe"], x)
+        new_state = {"dense": nd_kv, "moe": mo_kv}
+    elif fam == "ssm":
+        st: R.RWKVState = state["blocks"]
+
+        def body(carry, inp):
+            hh = carry
+            bp, s_tm, s_cm, s_wkv = inp
+            norms = {"ln1": bp["ln1"], "ln2": bp["ln2"]}
+            layer_state = R.RWKVState(shift_tm=s_tm, shift_cm=s_cm, wkv=s_wkv, length=st.length)
+            hh2, ns = R.rwkv6_block_fwd(
+                {"time": bp["time"], "channel": bp["channel"]}, cfg, hh, norms, layer_state
+            )
+            return hh2, (ns.shift_tm, ns.shift_cm, ns.wkv)
+
+        x, (tm, cm, wkv) = jax.lax.scan(body, x, (p["blocks"], st.shift_tm, st.shift_cm, st.wkv))
+        new_state = {"blocks": R.RWKVState(shift_tm=tm, shift_cm=cm, wkv=wkv, length=st.length + t)}
+    elif fam == "hybrid":
+        emb0 = x
+        gs: M.SSMState = state["groups"]
+        sh: A.KVCache = state["shared"]
+
+        def group_body(carry, inp):
+            hh = carry
+            gp, conv_g, ssm_g, k_g, v_g = inp
+
+            def inner(c2, inp2):
+                hh2 = c2
+                bp, conv_l, ssm_l = inp2
+                ls = M.SSMState(conv=conv_l, ssm=ssm_l, length=gs.length)
+                hh3, ns = B.mamba_block_fwd(bp, cfg, hh2, ls)
+                return hh3, (ns.conv, ns.ssm)
+
+            hh, (conv_n, ssm_n) = jax.lax.scan(inner, hh, (gp, conv_g, ssm_g))
+            if prefill:
+                hh, fresh = B.shared_block_fwd(p["shared"], cfg, hh, emb0, positions, None)
+                k_n = jax.lax.dynamic_update_slice_in_dim(
+                    k_g, fresh.k.astype(k_g.dtype), sh.length, axis=1)
+                v_n = jax.lax.dynamic_update_slice_in_dim(
+                    v_g, fresh.v.astype(v_g.dtype), sh.length, axis=1)
+                return hh, (conv_n, ssm_n, k_n, v_n)
+            cache_l = A.KVCache(k=k_g, v=v_g, length=sh.length)
+            hh, nc = B.shared_block_fwd(p["shared"], cfg, hh, emb0, positions, cache_l)
+            return hh, (conv_n, ssm_n, nc.k, nc.v)
+
+        x, (conv_n, ssm_n, ks, vs) = jax.lax.scan(
+            group_body, x, (p["groups"], gs.conv, gs.ssm, sh.k, sh.v)
+        )
+        new_state = {
+            "groups": M.SSMState(conv=conv_n, ssm=ssm_n, length=gs.length + t),
+            "shared": A.KVCache(k=ks, v=vs, length=sh.length + t),
+        }
+    else:
+        raise ValueError(fam)
+
+    h_final = L.norm_fwd(p["ln_f"], x, cfg.norm, cfg.norm_eps)
+    return _readout(p, cfg, h_final), new_state

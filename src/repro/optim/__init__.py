@@ -1,0 +1,11 @@
+"""Optimizer substrate: AdamW (configurable state dtype), global-norm
+clipping, LR schedules, int8 gradient compression with error feedback."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.compression import compress_int8, decompress_int8, CompressionState
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update",
+    "cosine_schedule", "linear_warmup",
+    "compress_int8", "decompress_int8", "CompressionState",
+]

@@ -1,0 +1,60 @@
+"""int8 gradient compression with error feedback.
+
+At 1000+ node scale the cross-pod (DCN) gradient all-reduce is the
+bandwidth bottleneck; int8 quantization cuts it 4x vs fp32 (2x vs bf16).
+Error feedback (Seide et al. / 1-bit SGD lineage) accumulates the
+quantization residual locally and re-injects it next step, which keeps
+SGD/Adam convergence intact (validated in tests on a quadratic and on the
+synthetic LM).
+
+Usage inside a train step:
+    q, state = compress_int8(grads, state)     # before the DCN all-reduce
+    grads = decompress_int8(q)                 # after
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    values: Any  # int8 pytree
+    scales: Any  # fp32 per-leaf scale
+
+
+class CompressionState(NamedTuple):
+    error: Any  # fp32 residual pytree
+
+
+def init_compression(params: Any) -> CompressionState:
+    return CompressionState(
+        error=jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    )
+
+
+def compress_int8(grads: Any, state: CompressionState) -> tuple[Quantized, CompressionState]:
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_e = g32 - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_e = td.flatten_up_to(state.error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        Quantized(
+            values=td.unflatten([o[0] for o in out]),
+            scales=td.unflatten([o[1] for o in out]),
+        ),
+        CompressionState(error=td.unflatten([o[2] for o in out])),
+    )
+
+
+def decompress_int8(q: Quantized) -> Any:
+    return jax.tree_util.tree_map(
+        lambda v, s: v.astype(jnp.float32) * s, q.values, q.scales
+    )

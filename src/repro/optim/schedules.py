@@ -1,0 +1,17 @@
+"""LR schedules (return a multiplier on the base LR)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, total_steps: int, warmup_steps: int = 0, final_frac: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, warmup_steps)
+    frac = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return warm * cos

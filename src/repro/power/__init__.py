@@ -1,0 +1,4 @@
+"""Workload power modeling: device states, phase timelines, trace synthesis."""
+from repro.power import device, phases, trace
+
+__all__ = ["device", "phases", "trace"]

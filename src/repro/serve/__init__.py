@@ -1,0 +1,4 @@
+"""Serving substrate: prefill/decode step builders + batched generation."""
+from repro.serve.engine import ServeEngine, build_prefill_step, build_decode_step
+
+__all__ = ["ServeEngine", "build_prefill_step", "build_decode_step"]

@@ -1,0 +1,81 @@
+"""Prefill/decode serving engine.
+
+``build_prefill_step``/``build_decode_step`` return the pure functions the
+dry-run lowers per (arch x decode shape); ``ServeEngine`` wraps them into a
+batched greedy/temperature generation loop with a KV-cache pool — the
+"serve a small model with batched requests" example driver uses it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import transformer as T
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.family == "audio":
+        def prefill(params, tokens, frames):
+            state = ED.init_decode_state(params, cfg, frames, tokens.shape[0], tokens.shape[1])
+            logits, state = ED.decode_step(params, cfg, tokens, state, jnp.asarray(0, jnp.int32), prefill=True)
+            return logits, state
+        return prefill
+
+    def prefill(params, tokens, max_len: int):
+        state = T.init_decode_state(cfg, tokens.shape[0], max_len)
+        logits, state = T.decode_step(params, cfg, tokens, state, jnp.asarray(0, jnp.int32), prefill=True)
+        return logits, state
+
+    return prefill
+
+
+def build_decode_step(cfg: ModelConfig) -> Callable:
+    mod = ED if cfg.family == "audio" else T
+
+    def decode(params, token, state, pos):
+        return mod.decode_step(params, cfg, token, state, pos)
+
+    return decode
+
+
+class ServeEngine:
+    """Batched greedy generation over the decode step (CPU-scale demos)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, max_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            lambda p, tok, st, pos: build_decode_step(cfg)(p, tok, st, pos)
+        )
+
+    def generate(
+        self, prompts: jax.Array, n_tokens: int, *, frames: jax.Array | None = None,
+        temperature: float = 0.0, key: jax.Array | None = None,
+    ) -> jax.Array:
+        cfg = self.cfg
+        b, t0 = prompts.shape
+        if cfg.family == "audio":
+            state = ED.init_decode_state(self.params, cfg, frames, b, self.max_len)
+        else:
+            state = T.init_decode_state(cfg, b, self.max_len)
+        logits, state = self._decode(self.params, prompts, state, jnp.asarray(0, jnp.int32))
+        out = [prompts]
+        tok = self._sample(logits[:, -1:], temperature, key, 0)
+        for i in range(n_tokens - 1):
+            out.append(tok)
+            logits, state = self._decode(self.params, tok, state, jnp.asarray(t0 + i, jnp.int32))
+            tok = self._sample(logits[:, -1:], temperature, key, i + 1)
+        out.append(tok)
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits, temperature, key, i):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,4 @@
+"""Sharding rules: logical axes -> PartitionSpecs (see rules.py)."""
+from repro.sharding.rules import batch_spec, cache_spec, param_spec, param_specs, shardings
+
+__all__ = ["batch_spec", "cache_spec", "param_spec", "param_specs", "shardings"]

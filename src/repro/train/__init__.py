@@ -1,0 +1,10 @@
+"""Training substrate: step builder, loop, checkpointing, fault tolerance."""
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import PowerAwareCheckpointer, StragglerMonitor, reassign_shards
+from repro.train.loop import TrainConfig, train
+from repro.train.step import build_train_step
+
+__all__ = [
+    "Checkpointer", "PowerAwareCheckpointer", "StragglerMonitor",
+    "reassign_shards", "TrainConfig", "train", "build_train_step",
+]

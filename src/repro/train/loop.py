@@ -1,0 +1,115 @@
+"""The training loop: jit'd step + data + checkpoints + fault tolerance +
+EasyRider PowerSim, composed.
+
+``train()`` is used both by examples/train_lm.py (end-to-end ~100M run) and
+the integration tests (short runs, restart-resume, emergency checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.models import encdec as ED
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.power.integration import PowerSim
+from repro.train.checkpoint import Checkpointer
+from repro.train.fault_tolerance import PowerAwareCheckpointer, StragglerMonitor
+from repro.train.step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: str | None = None
+    microbatches: int = 1
+    seed: int = 0
+    resume: bool = False
+
+
+def train(
+    cfg: ModelConfig,
+    data_cfg: DataConfig,
+    opt_cfg: AdamWConfig,
+    tc: TrainConfig,
+    *,
+    power_sim: PowerSim | None = None,
+    callbacks: list[Callable] | None = None,
+) -> dict:
+    key = jax.random.key(tc.seed)
+    init_fn = ED.init if cfg.family == "audio" else T.init
+    params = init_fn(key, cfg)
+    opt_state = adamw_init(params, opt_cfg)
+    step_fn = jax.jit(
+        build_train_step(
+            cfg, opt_cfg, microbatches=tc.microbatches, total_steps=tc.steps,
+            warmup_steps=max(tc.steps // 10, 1),
+        ),
+        donate_argnums=(0, 1),
+    )
+
+    start_step = 0
+    ckpt = None
+    if tc.checkpoint_dir:
+        ckpt = PowerAwareCheckpointer(
+            Checkpointer(tc.checkpoint_dir), every_steps=tc.checkpoint_every
+        )
+        if tc.resume and ckpt.ckpt.all_steps():
+            start_step, (params, opt_state) = ckpt.ckpt.restore(None, (params, opt_state))
+            start_step += 1
+
+    ds = SyntheticLMDataset(data_cfg)
+    monitor = StragglerMonitor(n_hosts=max(jax.process_count(), 1))
+    history: list[dict] = []
+    losses = []
+    t_prev = time.monotonic()
+    for step in range(start_step, tc.steps):
+        batch = ds.batch_at(step)
+        if cfg.family == "audio":
+            rng = np.random.default_rng(step)
+            batch["frames"] = jnp.asarray(
+                rng.normal(scale=0.02, size=(data_cfg.batch, cfg.encdec.encoder_seq, cfg.d_model)),
+                jnp.dtype(cfg.dtype),
+            )
+        params, opt_state, metrics = step_fn(params, opt_state, batch, jnp.asarray(step))
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        now = time.monotonic()
+        monitor.observe([now - t_prev])
+        t_prev = now
+
+        is_ckpt_step = bool(
+            tc.checkpoint_dir and tc.checkpoint_every and (step + 1) % tc.checkpoint_every == 0
+        )
+        if power_sim is not None:
+            power_sim.on_step(checkpoint_stall=is_ckpt_step)
+        if ckpt is not None:
+            soc = power_sim.soc if power_sim is not None else None
+            ckpt.maybe_save(step, (params, opt_state), soc=soc)
+        if step % tc.log_every == 0 or step == tc.steps - 1:
+            rec = {"step": step, "loss": loss, "grad_norm": float(metrics["grad_norm"])}
+            history.append(rec)
+        for cb in callbacks or []:
+            cb(step, metrics)
+
+    if ckpt is not None:
+        ckpt.ckpt.save(tc.steps - 1, (params, opt_state), blocking=True)
+    out = {
+        "params": params,
+        "opt_state": opt_state,
+        "history": history,
+        "first_loss": losses[0] if losses else None,
+        "last_loss": float(np.mean(losses[-5:])) if losses else None,
+    }
+    if power_sim is not None:
+        out["power_report"] = power_sim.report()
+    return out

@@ -1,0 +1,123 @@
+"""Train-step builder: loss + grad + AdamW, with microbatch gradient
+accumulation (lax.scan) and the V3 aux-free router-bias update.
+
+``build_train_step(cfg, opt_cfg, microbatches)`` returns a pure function
+
+    step(params, opt_state, batch, step_idx) -> (params, opt_state, metrics)
+
+suitable for jax.jit with in/out shardings from ``repro.sharding.rules``.
+Microbatching splits the global batch on the leading axis and accumulates
+grads in fp32 across a scan — the standard memory/efficiency trade that
+also amortizes the DP collective schedule.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as ED
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update
+from repro.optim.schedules import cosine_schedule
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    if cfg.family == "audio":
+        return ED.lm_loss(params, cfg, batch["tokens"], batch["labels"], batch["frames"])
+    return T.lm_loss(params, cfg, batch["tokens"], batch["labels"])
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    total_steps: int = 10_000,
+    warmup_steps: int = 100,
+    gather_small_weights_once: bool = False,
+) -> Callable:
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step_idx):
+        compute_params = params
+        if gather_small_weights_once and microbatches > 1:
+            # FSDP re-gathers every weight once per microbatch; for the
+            # small non-expert weights (attention/norm/router) that is pure
+            # waste — constrain them to model-only sharding so the data-
+            # axis all-gather happens ONCE per step, amortized over all
+            # microbatches (EXPERIMENTS §Perf-3 it.3).  Expert weights stay
+            # FSDP (too large to hold gathered).
+            from repro.sharding.rules import constrain_gathered_weight
+
+            def gather(path, leaf):
+                names = tuple(str(getattr(k, "name", getattr(k, "key", k))) for k in path)
+                if "experts" in names or leaf.ndim < 2:
+                    return leaf
+                return constrain_gathered_weight(names, leaf)
+
+            compute_params = jax.tree_util.tree_map_with_path(gather, params)
+        if microbatches > 1:
+            def slice_mb(x):
+                b = x.shape[0]
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = jax.tree_util.tree_map(slice_mb, batch)
+
+            def acc_body(carry, mb_batch):
+                acc, loss_acc = carry
+                loss, metrics, grads = grads_of(compute_params, mb_batch)
+                acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches, acc, grads
+                )
+                return (acc, loss_acc + loss / microbatches), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), metrics = jax.lax.scan(
+                acc_body, (zeros, jnp.zeros(())), mb
+            )
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        lr_scale = cosine_schedule(step_idx, total_steps, warmup_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, opt_cfg, lr_scale
+        )
+        # deepseek-v3 aux-loss-free balancing: bias nudge outside the grads
+        if cfg.moe is not None and cfg.moe.router == "sigmoid_bias":
+            load = metrics.get("expert_load")
+            if load is not None:
+                # router bias lives inside the scanned moe blocks
+                bias = params["moe_blocks"]["moe"]["router"].get("bias")
+                if bias is not None:
+                    target = cfg.moe.experts_per_token / cfg.moe.n_experts
+                    err = load - target
+                    new_bias = bias - 1e-3 * jnp.sign(err)[None, :]
+                    params = _set_in(params, ("moe_blocks", "moe", "router", "bias"), new_bias)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _set_in(tree: dict, path: tuple[str, ...], value):
+    if len(path) == 1:
+        out = dict(tree)
+        out[path[0]] = value
+        return out
+    out = dict(tree)
+    out[path[0]] = _set_in(tree[path[0]], path[1:], value)
+    return out

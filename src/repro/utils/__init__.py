@@ -1,0 +1,5 @@
+"""Small shared utilities: pytree dataclasses, registries, logging."""
+from repro.utils.structures import pytree_dataclass, static_field
+from repro.utils.registry import Registry
+
+__all__ = ["pytree_dataclass", "static_field", "Registry"]

@@ -1,0 +1,37 @@
+"""Tiny name -> factory registry used for architectures, kernels, etc."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Generic, Iterator, TypeVar
+
+T = TypeVar("T")
+
+
+class Registry(Generic[T]):
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: Dict[str, T] = {}
+
+    def register(self, name: str) -> Callable[[T], T]:
+        def deco(obj: T) -> T:
+            if name in self._items:
+                raise ValueError(f"duplicate {self.kind} registration: {name!r}")
+            self._items[name] = obj
+            return obj
+
+        return deco
+
+    def __getitem__(self, name: str) -> T:
+        try:
+            return self._items[name]
+        except KeyError:
+            known = ", ".join(sorted(self._items))
+            raise KeyError(f"unknown {self.kind} {name!r}; known: {known}") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._items))
+
+    def names(self) -> list[str]:
+        return sorted(self._items)

@@ -1,0 +1,14 @@
+"""Shared test configuration.
+
+NOTE: XLA_FLAGS device-count forcing is deliberately NOT set here — smoke
+tests and benchmarks must see the single real CPU device.  Only
+``launch/dryrun.py`` (run as a script) forces 512 host devices.
+"""
+import os
+
+# Keep XLA from eating every core during test runs; determinism matters more.
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")

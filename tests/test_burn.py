@@ -1,0 +1,74 @@
+"""GPU-burn baseline tests (paper §7.3, Appendix C)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import burn, compliance, pdu
+from repro.power import trace
+
+
+def test_calibration_recovers_linear_map():
+    cal = burn.calibrate(jax.random.key(0), p_idle=0.06, p_peak=1.0, noise_std=0.005)
+    assert float(cal.a) == pytest.approx(0.94, abs=0.02)
+    assert float(cal.b) == pytest.approx(0.06, abs=0.02)
+    assert float(cal.residual) < 0.01
+
+
+def test_duty_inversion_roundtrip():
+    cal = burn.DutyCalibration(a=jnp.asarray(0.9), b=jnp.asarray(0.1), residual=jnp.asarray(0.0))
+    for target in (0.2, 0.5, 0.95):
+        d = burn.duty_for_power(cal, jnp.asarray(target))
+        p = burn.true_duty_power(d, 0.1, 1.0)
+        assert float(p) == pytest.approx(target, abs=1e-6)
+
+
+def test_duty_clipped():
+    cal = burn.DutyCalibration(a=jnp.asarray(0.9), b=jnp.asarray(0.1), residual=jnp.asarray(0.0))
+    assert float(burn.duty_for_power(cal, jnp.asarray(2.0))) == 1.0
+    assert float(burn.duty_for_power(cal, jnp.asarray(0.0))) == 0.0
+
+
+def test_envelope_is_ramp_compliant_and_above_rack():
+    key = jax.random.key(1)
+    rack = 0.5 + 0.4 * jnp.sign(jax.random.normal(key, (5000,)))
+    dt = 0.01
+    env = burn.ramp_compliant_envelope(rack, dt, beta=0.1)
+    assert bool(jnp.all(env >= rack - 1e-6))
+    assert float(compliance.max_abs_ramp(env, dt)) <= 0.1 + 1e-6
+
+
+def test_envelope_tight_on_compliant_trace():
+    dt = 0.01
+    t = jnp.arange(2000) * dt
+    slow = 0.5 + 0.3 * jnp.sin(2 * jnp.pi * 0.01 * t)  # well within ramp
+    env = burn.ramp_compliant_envelope(slow, dt, beta=0.1)
+    np.testing.assert_allclose(np.asarray(env), np.asarray(slow), atol=1e-6)
+
+
+def test_burn_energy_overhead_matches_paper():
+    """Paper §7.3: software burn consumes ~19% more energy than
+    rack+EasyRider on the Titan X trace.  We assert the reproduced figure
+    falls in 10-30% and that EasyRider's own overhead is <2%."""
+    tb, dt = trace.titanx_testbench(jax.random.key(2))
+    cal = burn.calibrate(jax.random.key(3), p_idle=0.06, p_peak=1.0)
+    sched = burn.burn_schedule(tb, dt, beta=0.1, cal=cal)
+
+    cfg = pdu.make_pdu(sample_dt=dt)
+    st = pdu.init_state(cfg, tb[0])
+    gez, _, telem = pdu.condition(cfg, st, tb, qp_iters=20)
+    soc = np.asarray(telem.soc)
+    nwarm = sched.conditioned.shape[0] - tb.shape[0]
+    cmp = burn.compare_energy(
+        tb, gez, sched.conditioned[nwarm:], dt,
+        soc_delta=float(soc[-1]) - 0.5, q_max_seconds=float(cfg.ess_params.q_max),
+    )
+    assert 0.10 <= float(cmp["burn_vs_easyrider_frac"]) <= 0.30
+    assert 0.0 - 1e-3 <= float(cmp["easyrider_overhead_frac"]) <= 0.02
+
+
+def test_burn_conditioned_trace_is_ramp_compliant():
+    tb, dt = trace.titanx_testbench(jax.random.key(4))
+    cal = burn.calibrate(jax.random.key(5), p_idle=0.06, p_peak=1.0)
+    sched = burn.burn_schedule(tb, dt, beta=0.1, cal=cal)
+    assert float(compliance.max_abs_ramp(sched.conditioned, dt)) <= 0.1 * (1 + 1e-3)

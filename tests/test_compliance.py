@@ -1,0 +1,71 @@
+"""Compliance-math tests (paper §3): spectrum normalization, ramp checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance
+
+
+def test_spectrum_dc_is_mean():
+    p = jnp.full((1000,), 0.73)
+    freqs, s = compliance.normalized_spectrum(p, 1e-3)
+    assert float(s[0]) == pytest.approx(0.73, rel=1e-5)
+    # Hann window puts the DC line's sidelobe in bin 1 only; beyond that
+    # a constant has no content.
+    assert float(jnp.max(s[2:])) < 1e-5
+    freqs, s_raw = compliance.normalized_spectrum(p, 1e-3, window=None)
+    assert float(s_raw[0]) == pytest.approx(0.73, rel=1e-5)
+    assert float(jnp.max(s_raw[1:])) < 1e-6
+
+
+def test_spectrum_sinusoid_amplitude():
+    """A sinusoid of amplitude A must read S = A at its frequency bin."""
+    dt = 1e-3
+    n = 10_000
+    t = jnp.arange(n) * dt
+    for f0, a in [(5.0, 0.2), (50.0, 0.01)]:
+        p = 0.5 + a * jnp.sin(2 * jnp.pi * f0 * t)
+        freqs, s = compliance.normalized_spectrum(p, dt)
+        i = int(jnp.argmin(jnp.abs(freqs - f0)))
+        assert float(s[i]) == pytest.approx(a, rel=1e-3)
+
+
+def test_ramp_rate_of_linear_ramp():
+    dt = 0.01
+    p = jnp.arange(100) * dt * 0.05  # slope 0.05/s
+    assert float(compliance.max_abs_ramp(p, dt)) == pytest.approx(0.05, rel=1e-4)
+
+
+def test_check_flags_violations():
+    spec = compliance.GridSpec.create(beta=0.1, alpha=1e-4, f_c=2.0)
+    dt = 1e-3
+    n = 20_000
+    t = jnp.arange(n) * dt
+    bad = 0.5 + 0.3 * jnp.sign(jnp.sin(2 * jnp.pi * 1.0 * t))  # square wave
+    rep = compliance.check(bad, dt, spec)
+    assert not bool(rep.ok)
+    good = jnp.full((n,), 0.5)
+    rep2 = compliance.check(good, dt, spec)
+    assert bool(rep2.ok)
+
+
+def test_check_batched_over_racks():
+    spec = compliance.GridSpec.create()
+    dt = 1e-3
+    t = jnp.arange(8000) * dt
+    flat = jnp.full_like(t, 0.6)
+    square = 0.5 + 0.4 * jnp.sign(jnp.sin(2 * jnp.pi * 3.0 * t))
+    p = jnp.stack([flat, square], axis=1)
+    rep = compliance.check(p, dt, spec)
+    assert rep.ok.shape == (2,)
+    assert bool(rep.ok[0]) and not bool(rep.ok[1])
+
+
+def test_violation_fraction():
+    spec = compliance.GridSpec.create(beta=0.1)
+    dt = 0.01
+    p = jnp.zeros((1000,))
+    p = p.at[500].set(1.0)  # one spike -> 2 bad forward diffs
+    frac = float(compliance.violation_fraction(p, dt, spec))
+    assert frac == pytest.approx(2.0 / 999.0, rel=1e-6)

@@ -1,0 +1,137 @@
+"""ESS (paper §5.3, Eq. 2, Appendix A.1) tests, incl. hypothesis property
+tests of the paper's guarantees: ramp bound and energy-swing bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compliance, ess
+
+
+def _params(beta=0.1, q=120.0, lo=0.0, hi=1.0):
+    return ess.ESSParams.create(
+        beta=beta, q_max_seconds=q, soc_safe_min=lo, soc_safe_max=hi
+    )
+
+
+def test_step_drop_is_ramp_limited():
+    p = _params()
+    dt = 1e-3
+    r = jnp.ones((40_000,)) * 0.9
+    r = r.at[20_000:].set(0.1)
+    g, soc, _ = ess.simulate(p, ess.init_state(p, jnp.asarray(0.9)), r, dt)
+    assert float(compliance.max_abs_ramp(g, dt)) <= 0.1 * 0.8 + 1e-5
+
+
+def test_settles_in_about_30s():
+    """Paper §5.3: 'the DC supply takes about 30 seconds after a step change
+    ... before tapering off' — 3 time constants at beta=0.1 is 30 s."""
+    p = _params()
+    dt = 1e-2
+    n = 8000
+    r = jnp.ones((n,)) * 0.9
+    r = r.at[1000:].set(0.1)
+    g, _, _ = ess.simulate(p, ess.init_state(p, jnp.asarray(0.9)), r, dt)
+    # 95% settled (3 tau) ~30 s after the step at t=10 s.
+    t95 = 0.9 - 0.95 * 0.8
+    idx = int(np.argmax(np.asarray(g) <= t95))
+    assert (idx - 1000) * dt == pytest.approx(30.0, rel=0.05)
+
+
+def test_cutoff_matches_paper():
+    """f_b = beta/2pi ~= 0.016 Hz for beta = 0.1 (paper §1: '>= 0.016 Hz')."""
+    p = _params()
+    assert float(p.cutoff_hz()) == pytest.approx(0.0159, abs=2e-4)
+
+
+def test_transfer_function_20db_per_decade():
+    p = _params()
+    f = jnp.array([0.16, 1.6, 16.0])
+    m = np.asarray(ess.transfer_function(p, f))
+    assert m[0] / m[1] == pytest.approx(10.0, rel=0.05)
+    assert m[1] / m[2] == pytest.approx(10.0, rel=0.05)
+
+
+def test_charge_discharge_efficiency_asymmetry():
+    p = ess.ESSParams.create(eta_c=0.9, eta_d=0.8, q_max_seconds=10.0)
+    up = ess.soc_increment(p, jnp.asarray(1.0), dt=1.0)
+    down = ess.soc_increment(p, jnp.asarray(-1.0), dt=1.0)
+    assert float(up) == pytest.approx(0.09)
+    assert float(down) == pytest.approx(-0.125)
+
+
+def test_saturation_sheds_to_grid():
+    """A battery at its upper safe bound cannot absorb a drop: the grid
+    must see the transient (and the SoC must not exceed the bound)."""
+    p = ess.ESSParams.create(beta=0.1, q_max_seconds=5.0, soc_safe_max=0.6)
+    dt = 1e-2
+    r = jnp.ones((4000,)) * 0.9
+    r = r.at[500:].set(0.1)
+    st = ess.ESSState(g_filter=jnp.asarray(0.9), soc=jnp.asarray(0.58))
+    g, soc, _ = ess.simulate(p, st, r, dt)
+    assert float(jnp.max(soc)) <= 0.6 + 1e-6
+    assert float(compliance.max_abs_ramp(g, dt)) > 0.1  # transient leaked
+
+
+def test_corrective_power_isolation():
+    """Paper §6: a (bounded) wrong software command cannot break filtering —
+    grid output differs by at most the corrective magnitude."""
+    p = _params()
+    dt = 1e-3
+    key = jax.random.key(0)
+    r = 0.5 + 0.3 * jax.random.uniform(key, (20_000,))
+    st = ess.init_state(p, r[0])
+    g0, _, _ = ess.simulate(p, st, r, dt, corrective_power=0.0)
+    g1, _, _ = ess.simulate(p, st, r, dt, corrective_power=2e-3)
+    assert float(jnp.max(jnp.abs(g1 - g0))) <= 2e-3 + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    beta=st.floats(0.02, 0.5),
+    p_hi=st.floats(0.5, 1.0),
+    p_lo=st.floats(0.0, 0.4),
+)
+def test_property_ramp_never_exceeds_beta(beta, p_hi, p_lo):
+    """Paper's core guarantee (Eq. 2): |dP_grid/dt| <= beta for ANY step."""
+    p = _params(beta=beta, q=1e6)  # capacity large enough to never saturate
+    dt = 1e-2
+    r = jnp.ones((2000,)) * p_hi
+    r = r.at[1000:].set(p_lo)
+    g, _, _ = ess.simulate(p, ess.init_state(p, jnp.asarray(p_hi)), r, dt)
+    # discrete exact ZOH gives (1-exp(-b dt))/dt < b
+    assert float(compliance.max_abs_ramp(g, dt)) <= beta * abs(p_hi - p_lo) + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    beta=st.floats(0.05, 0.3),
+    i1=st.floats(0.3, 1.0),
+    i2=st.floats(0.0, 0.25),
+    data=st.data(),
+)
+def test_property_energy_swing_bound(beta, i1, i2, data):
+    """Appendix A.1 Eq. 7: net stored energy during any trace <= (eps/beta).
+
+    We generate a random piecewise-constant trace bounded in [i2, i1] and
+    check |cumulative battery energy| <= (i1 - i2)/beta at all times.
+    """
+    p = _params(beta=beta, q=1e6)
+    dt = 0.05
+    n_seg = data.draw(st.integers(3, 8))
+    levels = [data.draw(st.floats(i2, i1)) for _ in range(n_seg)]
+    seg = 400
+    r = jnp.concatenate([jnp.full((seg,), lv, jnp.float32) for lv in levels])
+    st0 = ess.init_state(p, r[0])
+    g, _, _ = ess.simulate(p, st0, r, dt)
+    batt_energy = jnp.cumsum(g - r) * dt  # per-unit seconds
+    bound = (i1 - i2) / beta
+    assert float(jnp.max(jnp.abs(batt_energy))) <= bound + 1e-3
+
+
+def test_sizing_formulas():
+    assert ess.required_capacity_seconds(beta=0.1, epsilon=0.8, gamma=0.5) == pytest.approx(16.0)
+    assert ess.required_power_fraction(0.8) == pytest.approx(0.8)
+    p = _params(beta=0.1)
+    assert float(ess.worst_case_energy_swing(p, 0.8)) == pytest.approx(8.0)

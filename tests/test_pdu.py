@@ -1,0 +1,171 @@
+"""End-to-end PDU tests (paper §7.2): the central claims — a rack trace
+violating the grid spec becomes compliant after EasyRider conditioning,
+without workload modification; frequency response composes (Fig. 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance, ess, filters, pdu
+from repro.power import trace
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return compliance.GridSpec.create(beta=0.1, alpha=1e-4, f_c=2.0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return pdu.make_pdu(sample_dt=2e-3)
+
+
+@pytest.fixture(scope="module")
+def testbench():
+    sp = trace.TestbenchSpec(duration_s=120.0, sample_hz=500.0, terminate_at_s=100.0)
+    return trace.testbench_trace(sp, jax.random.key(0))
+
+
+@pytest.fixture(scope="module")
+def conditioned(cfg, testbench):
+    rack, dt = testbench
+    st = pdu.init_state(cfg, rack[0])
+    grid, st2, telem = jax.jit(lambda s, r: pdu.condition(cfg, s, r, qp_iters=40))(st, rack)
+    return rack, grid, telem, dt
+
+
+def test_rack_trace_violates(conditioned, spec):
+    rack, _, _, dt = conditioned
+    rep = compliance.check(rack, dt, spec)
+    assert not bool(rep.ok)
+    assert float(rep.max_ramp) > 1.0  # raw training swings are wildly out
+
+
+def test_conditioned_trace_complies(conditioned, spec):
+    """Paper Fig. 9/10: ramp <= beta AND S(f >= f_c) <= alpha."""
+    _, grid, _, dt = conditioned
+    rep = compliance.check(grid, dt, spec)
+    assert float(rep.max_ramp) <= float(spec.beta) + 1e-4
+    assert float(rep.worst_high_freq_mag) <= float(spec.alpha)
+    assert bool(rep.ok)
+
+
+def test_peak_power_reduced(conditioned):
+    """Paper §7.2: 'exhibits a lower peak power draw'."""
+    rack, grid, _, _ = conditioned
+    assert float(grid.max()) < float(rack.max())
+
+
+def test_energy_approximately_conserved(conditioned, cfg):
+    """The PDU is not a burn: grid energy ~ rack energy (+small losses and
+    battery SoC movement)."""
+    rack, grid, telem, dt = conditioned
+    e_rack = float(jnp.sum(rack)) * dt
+    e_grid = float(jnp.sum(grid)) * dt
+    soc = np.asarray(telem.soc)
+    stored = (soc[-1] - 0.5) * float(cfg.ess_params.q_max)
+    assert abs(e_grid - stored - e_rack) / e_rack < 0.05
+
+
+def test_soc_stays_in_safe_band(conditioned, cfg):
+    _, _, telem, _ = conditioned
+    soc = np.asarray(telem.soc)
+    assert soc.min() >= float(cfg.ess_params.soc_safe_min) - 1e-6
+    assert soc.max() <= float(cfg.ess_params.soc_safe_max) + 1e-6
+
+
+def test_streaming_equals_batch(cfg, testbench):
+    """Conditioning in chunks (the trainer integration path) must equal
+    conditioning the whole trace at once."""
+    rack, dt = testbench
+    st = pdu.init_state(cfg, rack[0])
+    full, _, _ = pdu.condition(cfg, st, rack, qp_iters=20)
+    st2 = pdu.init_state(cfg, rack[0])
+    n = rack.shape[0]
+    # chunk at controller-interval multiples (streaming contract)
+    k = int(round(float(cfg.controller.dt) / cfg.sample_dt))
+    cut = (n // (2 * k)) * k
+    a, st2, _ = pdu.condition(cfg, st2, rack[:cut], qp_iters=20)
+    b, st2, _ = pdu.condition(cfg, st2, rack[cut:], qp_iters=20)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([a, b])), np.asarray(full), atol=1e-5
+    )
+
+
+def test_combined_response_is_product(cfg):
+    f = jnp.logspace(-3, 2, 50)
+    total = pdu.combined_transfer_function(cfg, f)
+    prod = ess.transfer_function(cfg.ess_params, f) * filters.transfer_function_rack_to_grid(
+        cfg.filter_params, f
+    )
+    np.testing.assert_allclose(np.asarray(total), np.asarray(prod), rtol=1e-6)
+
+
+def test_combined_response_meets_spec_envelope(cfg, spec):
+    """Above f_c the combined response times a worst-case unit fluctuation
+    must sit below alpha with the paper's prototype parameters... with the
+    testbench's actual content (<= ~0.2 above 2 Hz) this is what enforces
+    Fig. 10."""
+    f = jnp.linspace(2.0, 100.0, 200)
+    h = np.asarray(pdu.combined_transfer_function(cfg, f))
+    # worst rack magnitude at/above 2 Hz for compliant conditioning:
+    allowed_rack_mag = float(spec.alpha) / h.max()
+    assert allowed_rack_mag > 5e-3  # tolerates >0.5% rated-power lines
+
+
+def test_hardware_only_mode_still_complies(testbench, spec):
+    """Paper §8 fault tolerance: software offline -> hardware still smooths
+    (only SoC management degrades)."""
+    rack, dt = testbench
+    cfg = pdu.make_pdu(sample_dt=1.0 / 500.0, software_enabled=False)
+    st = pdu.init_state(cfg, rack[0])
+    grid, _, _ = pdu.condition(cfg, st, rack)
+    rep = compliance.check(grid, dt, spec)
+    assert bool(rep.ok)
+
+
+def test_multi_rack_vectorized(cfg, spec):
+    sp = trace.TestbenchSpec(duration_s=60.0, sample_hz=500.0)
+    t1, dt = trace.testbench_trace(sp, jax.random.key(1))
+    t2, _ = trace.testbench_trace(sp, jax.random.key(2))
+    racks = jnp.stack([t1, t2], axis=1)
+    cfg2 = pdu.make_pdu(sample_dt=dt)
+    st = pdu.init_state(cfg2, racks[0])
+    grid, _, telem = pdu.condition(cfg2, st, racks, qp_iters=20)
+    assert grid.shape == racks.shape
+    rep = compliance.check(grid, dt, spec)
+    assert rep.ok.shape == (2,)
+    assert bool(rep.ramp_ok.all())
+
+
+def test_storage_mode_lowers_soc_during_idle(cfg):
+    """Outer-loop storage mode (paper §6/Eq. 11): during a long predicted
+    idle window the controller walks the SoC down toward S_idle."""
+    import jax.numpy as jnp
+    from repro.core import pdu as pdu_mod
+
+    dt = 0.05  # coarse samples: long horizon, cheap sim
+    cfg2 = pdu_mod.make_pdu(sample_dt=dt)
+    t = int(40 * 60 / dt)  # 40 minutes of idle at constant low power
+    rack = jnp.full((t,), 0.1, jnp.float32)
+    st = pdu_mod.init_state(cfg2, rack[0], soc0=0.5)
+    _, _, telem = pdu_mod.condition(
+        cfg2, st, rack, idle_remaining_s=3 * 3600.0, qp_iters=40
+    )
+    soc = np.asarray(telem.soc)
+    tgt = np.asarray(telem.target)
+    assert tgt[2] < 0.5 - 0.05  # storage-mode target selected
+    assert soc[-1] < soc[0] - 0.02  # SoC walked down toward it
+
+
+def test_active_mode_keeps_mid_target(cfg):
+    import jax.numpy as jnp
+    from repro.core import pdu as pdu_mod
+
+    dt = 0.05
+    cfg2 = pdu_mod.make_pdu(sample_dt=dt)
+    rack = jnp.full((int(60 / dt),), 0.6, jnp.float32)
+    st = pdu_mod.init_state(cfg2, rack[0], soc0=0.5)
+    _, _, telem = pdu_mod.condition(cfg2, st, rack, idle_remaining_s=0.0, qp_iters=20)
+    tgt = np.asarray(telem.target)
+    np.testing.assert_allclose(tgt, 0.5, atol=1e-6)

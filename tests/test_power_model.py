@@ -1,0 +1,91 @@
+"""Workload power-model tests (repro.power)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance
+from repro.power import device, phases, trace
+
+
+def test_device_ratios_match_paper():
+    """Paper §2.2: H100 700->140 W (5:1), B200 1000->50 W (20:1)."""
+    assert device.H100.peak_to_idle == pytest.approx(5.0)
+    assert device.B200.peak_to_idle == pytest.approx(20.0)
+
+
+def test_testbench_trace_structure():
+    sp = trace.TestbenchSpec(duration_s=66.0, sample_hz=500.0, noise_std=0.0)
+    p, dt = trace.testbench_trace(sp, None)
+    assert p.shape == (33000,)
+    assert float(p.max()) <= 1.0 and float(p.min()) >= 0.0
+    # has both compute-level and comm-level power
+    assert float(p.max()) > 0.85
+    assert float(p.min()) < 0.3
+
+
+def test_testbench_spectral_line_at_1_over_22hz():
+    """Paper Fig. 3b: prominent peak near 1/22 Hz with S ~ 0.1."""
+    p, dt = trace.choukse_testbench(None)
+    freqs, s = compliance.normalized_spectrum(p, dt)
+    band = (freqs > 1 / 30) & (freqs < 1 / 15)
+    mags = jnp.where(band, s, 0.0)
+    i = int(jnp.argmax(mags))
+    assert abs(float(freqs[i]) - 1 / 22) < 0.01
+    assert 0.05 < float(s[i]) < 0.3
+
+
+def test_fault_trace_has_huge_ramp():
+    """Fig. 13: the computation-fault drop is far beyond any generator."""
+    p, dt = trace.cluster_fault_trace(None)
+    r = float(compliance.max_abs_ramp(p, dt))
+    assert r > 10.0  # >1000% of rated power per second
+
+
+def test_phase_timeline_trace_lengths():
+    durs = np.array([0.5, 0.25, 0.5])
+    pows = np.array([1.0, 0.3, 1.0], np.float32)
+    p, dt = trace.phase_timeline_trace(durs, pows, sample_hz=100.0, edge_time_s=0.0)
+    assert p.shape[0] == 125
+    assert float(p[0]) == 1.0 and float(p[60]) == pytest.approx(0.3)
+    # with edges, transitions are linear ramps instead of steps
+    p2, _ = trace.phase_timeline_trace(durs, pows, sample_hz=100.0, edge_time_s=0.1)
+    assert float(jnp.max(jnp.abs(jnp.diff(p2)))) < float(jnp.max(jnp.abs(jnp.diff(p))))
+
+
+def test_step_phases_durations():
+    hw = phases.HardwareConstants(chips=256)
+    cost = phases.StepCost(flops=1e18, hbm_bytes=1e15, collective_bytes=2e14)
+    model = phases.PhaseModel(mfu=0.5, overlap=0.0)
+    d, p = phases.step_phases(cost, hw, model)
+    t_busy = 1e18 / (256 * 197e12 * 0.5)
+    assert d[0] == pytest.approx(t_busy, rel=1e-6)
+    assert p[0] == 1.0 and p[1] < 0.6
+
+
+def test_training_timeline_has_checkpoint_stalls():
+    hw = phases.HardwareConstants(chips=8)
+    cost = phases.StepCost(flops=1e15, hbm_bytes=1e12, collective_bytes=1e11)
+    model = phases.PhaseModel(checkpoint_every_steps=5, checkpoint_stall_s=2.0)
+    d, p = phases.training_timeline(cost, hw, model, n_steps=10, warmup_s=1.0, warmup_levels=2)
+    idle = model.device.p_idle_w / model.device.p_peak_w
+    # two checkpoint stalls of 2 s at idle power
+    stalls = [(di, pi) for di, pi in zip(d, p) if di == 2.0 and pi == pytest.approx(idle)]
+    assert len(stalls) >= 2
+
+
+def test_workload_trace_violates_then_conditioned(tmp_path):
+    """The full pipeline: phase model -> trace -> EasyRider -> compliant."""
+    from repro.core import pdu
+
+    hw = phases.HardwareConstants(chips=256)
+    cost = phases.StepCost(flops=5e18, hbm_bytes=2e15, collective_bytes=5e14)
+    model = phases.PhaseModel(checkpoint_every_steps=8, checkpoint_stall_s=3.0)
+    d, pw = phases.training_timeline(cost, hw, model, n_steps=24)
+    p, dt = trace.phase_timeline_trace(d, pw, sample_hz=200.0)
+    spec = compliance.GridSpec.create()
+    assert not bool(compliance.check(p, dt, spec).ramp_ok)
+    cfg = pdu.make_pdu(sample_dt=dt)
+    st = pdu.init_state(cfg, p[0])
+    grid, _, _ = pdu.condition(cfg, st, p, qp_iters=15)
+    assert bool(compliance.check(grid, dt, spec).ramp_ok)

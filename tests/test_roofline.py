@@ -1,0 +1,104 @@
+"""Roofline HLO-parser tests (single-device: no collectives, but dots,
+scans and trip counts are all exercised and checked against analytics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import roofline as RL
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile().as_text()
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    txt = _compile(
+        f,
+        jax.ShapeDtypeStruct((64, 128), jnp.float32),
+        jax.ShapeDtypeStruct((128, 32), jnp.float32),
+    )
+    costs = RL.analyze_compiled_hlo(txt)
+    assert costs.flops_per_device == pytest.approx(2 * 64 * 128 * 32, rel=1e-6)
+
+
+def test_scan_trip_count_multiplies_flops():
+    L = 7
+
+    def f(ws, x):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+
+        h, _ = jax.lax.scan(body, x, ws)
+        return h.sum()
+
+    txt = _compile(
+        f,
+        jax.ShapeDtypeStruct((L, 64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((8, 64), jnp.float32),
+    )
+    costs = RL.analyze_compiled_hlo(txt)
+    assert L in costs.while_trip_counts.values()
+    assert costs.flops_per_device == pytest.approx(L * 2 * 8 * 64 * 64, rel=1e-3)
+
+
+def test_nested_scan_composes_trip_counts():
+    lo, li = 3, 5
+
+    def f(ws, x):
+        def outer(h, wgroup):
+            def inner(hh, w):
+                return hh @ w, None
+
+            h2, _ = jax.lax.scan(inner, h, wgroup)
+            return h2, None
+
+        h, _ = jax.lax.scan(outer, x, ws)
+        return h.sum()
+
+    txt = _compile(
+        f,
+        jax.ShapeDtypeStruct((lo, li, 32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((4, 32), jnp.float32),
+    )
+    costs = RL.analyze_compiled_hlo(txt)
+    assert costs.flops_per_device == pytest.approx(lo * li * 2 * 4 * 32 * 32, rel=1e-3)
+
+
+def test_shape_bytes_tuple_types():
+    assert RL._shape_bytes("f32[4,8]{1,0}") == 128
+    assert RL._shape_bytes("(s32[], f32[2,2]{1,0}, bf16[8]{0})") == 4 + 16 + 16
+    assert RL._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_and_bottleneck():
+    hw = RL.HardwareModel()
+    costs = RL.HLOCosts(
+        flops_per_device=197e12,  # exactly 1 second of compute
+        hbm_bytes_per_device=819e9 * 0.5,
+        collective_bytes_per_device=0.0,
+        collective_breakdown={},
+        n_collectives=0,
+        while_trip_counts={},
+    )
+    t = RL.roofline_terms(costs, hw)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.bottleneck == "compute"
+    assert t.step_time_s == pytest.approx(1.0)
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.configs import full_config
+    from repro.configs.shapes import TRAIN_4K
+
+    dense = full_config("llama3_2_1b")
+    moe = full_config("deepseek_v3_671b")
+    mf_dense = RL.model_flops(dense, TRAIN_4K, backward=True)
+    assert mf_dense == pytest.approx(6 * dense.param_count() * 256 * 4096, rel=1e-6)
+    # MoE counts ACTIVE params only
+    mf_moe = RL.model_flops(moe, TRAIN_4K, backward=True)
+    assert mf_moe < 6 * moe.param_count() * 256 * 4096 * 0.1

@@ -1,0 +1,109 @@
+"""Sharding-rules tests: param spec assignment, divisibility fallback,
+activation constraints as no-ops without a mesh, decode-state specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.sharding import rules
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    # single-device "production-shaped" mesh: axes exist, sizes are 1
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _spec(path, shape, mesh):
+    return rules.param_spec(tuple(path), tuple(shape), mesh)
+
+
+def test_up_kernel_spec(mesh1):
+    s = _spec(("blocks", "attn", "wq", "kernel"), (16, 2048, 4096), mesh1)
+    assert s == P(None, "data", "model")
+
+
+def test_down_kernel_spec(mesh1):
+    s = _spec(("blocks", "ffn", "w_down", "kernel"), (16, 8192, 2048), mesh1)
+    assert s == P(None, "model", "data")
+
+
+def test_embedding_spec(mesh1):
+    s = _spec(("embed", "embedding"), (128256, 2048), mesh1)
+    assert s == P("model", "data")
+
+
+def test_expert_spec(mesh1):
+    s = _spec(("moe_blocks", "moe", "experts", "w_up"), (58, 256, 7168, 2048), mesh1)
+    assert s == P(None, "model", "data", None)
+
+
+def test_norm_and_bias_replicated(mesh1):
+    assert _spec(("ln1", "scale"), (2048,), mesh1) == P()
+    assert _spec(("attn", "wq", "bias"), (4096,), mesh1) == P()
+    assert _spec(("moe", "router", "kernel"), (5120, 256), mesh1) == P()
+
+
+def test_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    # model axis size 1 always divides; emulate non-divisible via size check:
+    # use the helper directly
+    assert rules._fits(20, mesh, "model")  # 20 % 1 == 0
+
+
+def test_batch_spec(mesh1):
+    assert rules.batch_spec(mesh1, 256) == P("data")
+    # batch=1 (long-context): unsharded
+    mesh = mesh1
+    s = rules.batch_spec(mesh, 1)
+    assert s in (P("data"), P(None))  # data size 1 divides 1 -> either fine
+
+
+def test_maybe_constrain_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    y = rules.maybe_constrain(x, "data", None)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_maybe_constrain_drops_nondivisible(mesh1):
+    # under a mesh context, non-divisible dims must be dropped, not error
+    with mesh1:
+        x = jnp.ones((3, 8))  # 3 % 1 == 0 so fine; just exercise the path
+        y = rules.constrain_activations(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_decode_state_specs_kv(mesh1):
+    from repro.models.attention import KVCache
+
+    st = {
+        "blocks": KVCache(
+            k=jax.ShapeDtypeStruct((16, 32, 4096, 8, 64), jnp.bfloat16),
+            v=jax.ShapeDtypeStruct((16, 32, 4096, 8, 64), jnp.bfloat16),
+            length=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+    }
+    specs = rules.decode_state_specs(st, mesh1)
+    assert specs["blocks"].k == P(None, "data", None, "model", None)
+    assert specs["blocks"].length == P()
+
+
+def test_decode_state_specs_mla(mesh1):
+    from repro.models.attention import KVCache
+
+    st = KVCache(
+        k=jax.ShapeDtypeStruct((61, 128, 32768, 512), jnp.bfloat16),  # c_kv
+        v=jax.ShapeDtypeStruct((61, 128, 32768, 64), jnp.bfloat16),  # k_rope
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    specs = rules.decode_state_specs(st, mesh1)
+    assert specs.k == P(None, "data", "model", None)
+
+
+def test_gathered_weight_constraint_under_mesh(mesh1):
+    with mesh1:
+        w = jnp.ones((64, 128))
+        out = rules.constrain_gathered_weight(("blocks", "attn", "wq", "kernel"), w)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(w))
