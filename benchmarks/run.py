@@ -1,7 +1,9 @@
 """Benchmark harness: one function per paper table/figure + kernel benches.
 
 Prints ``name,us_per_call,derived`` CSV (and a roofline summary if dry-run
-records exist under experiments/dryrun/).
+records exist under experiments/dryrun/), and writes a machine-readable
+``BENCH_power.json`` (``{bench_name: us_per_call}``) at the repo root so
+the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -10,21 +12,34 @@ import json
 import os
 import sys
 
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
 
 def main() -> None:
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    # Make both ``repro`` and the ``benchmarks`` package importable when run
+    # as a plain script (``python benchmarks/run.py``) from anywhere.
+    sys.path.insert(0, _REPO_ROOT)
+    sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
     from benchmarks import kernel_benches, paper_benches
 
     print("name,us_per_call,derived")
     failures = 0
+    records: dict[str, float] = {}
     for fn in paper_benches.ALL + kernel_benches.ALL:
         try:
             name, us, derived = fn()
+            records[name] = round(float(us), 1)
             print(f"{name},{us:.0f},{derived}")
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
         sys.stdout.flush()
+
+    out_path = os.path.join(_REPO_ROOT, "BENCH_power.json")
+    with open(out_path, "w") as f:
+        json.dump(records, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {out_path} ({len(records)} benches)")
 
     # roofline summary from dry-run records, if present
     recs = sorted(glob.glob("experiments/dryrun/*__16_16.json"))

@@ -14,7 +14,8 @@ same device mesh the trainer uses (`shard_racks`).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import functools
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,15 +76,18 @@ def condition_fleet(
     *,
     soc0: float = 0.5,
     qp_iters: int = 60,
+    use_plan: bool = True,
 ) -> FleetResult:
     """Condition every rack with its own PDU; check campus compliance.
 
     The per-rack state is fully vectorized (rack axis rides through the
     scans), so this is one fused XLA computation whatever R is.
+    ``use_plan=False`` selects the per-rack build+factor controller path
+    (the seed cold-start baseline used by benchmarks).
     """
     r0 = traces[0]
     state = pdu.init_state(cfg, r0, soc0=soc0)
-    grid, _, _ = pdu.condition(cfg, state, traces, qp_iters=qp_iters)
+    grid, _, _ = pdu.condition(cfg, state, traces, qp_iters=qp_iters, use_plan=use_plan)
     campus_rack = jnp.mean(traces, axis=1)
     campus_grid = jnp.mean(grid, axis=1)
     return FleetResult(
@@ -92,6 +96,100 @@ def condition_fleet(
         campus_grid=campus_grid,
         report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
         report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
+    )
+
+
+# ----------------------------------------------------------------- streaming
+
+
+class StreamingFleetResult(NamedTuple):
+    campus_rack: jax.Array  # (T,) mean per-unit unconditioned campus load
+    campus_grid: jax.Array  # (T,) mean per-unit conditioned campus load
+    soc_mean: jax.Array  # (n_ctrl,) fleet-mean SoC per control interval
+    report_rack: compliance.ComplianceReport
+    report_grid: compliance.ComplianceReport
+    state: pdu.PDUState  # final per-rack PDU state (the stream can resume)
+    max_qp_residual: jax.Array  # worst per-interval QP primal residual seen
+
+
+def condition_fleet_streaming(
+    cfg: pdu.PDUConfig,
+    traces: jax.Array | Callable[[int, int], jax.Array],
+    grid_spec: compliance.GridSpec,
+    *,
+    soc0: float = 0.5,
+    qp_iters: int = 30,
+    chunk_intervals: int = 16,
+    total_samples: int | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+) -> StreamingFleetResult:
+    """Campus-scale conditioning in time chunks with bounded working set.
+
+    ``condition_fleet`` materializes the rack traces *and* the conditioned
+    grid waveform as full (T, R) arrays — 2x the campus trace in HBM, which
+    is what caps fleet size for hour-long traces.  This engine walks the
+    trace in chunks of ``chunk_intervals`` controller intervals, donates
+    the per-rack ``PDUState`` buffers between chunks, reduces each chunk to
+    campus aggregates inside the jitted step (the per-rack grid waveform
+    never leaves the chunk), and carries the controller's warm-started ADMM
+    state across chunks via ``PDUState.qp_warm`` — so at equal ``qp_iters``
+    the result is identical to the one-shot ``condition_fleet`` call while
+    live memory stays O(chunk * R).  The default ``qp_iters=30`` assumes
+    the warm-started plan path, where 30 iterations match the seed
+    cold-start path's residual at 120 (EXPERIMENTS.md §Perf-4).
+
+    ``traces`` is either a (T, R) array or a chunk provider
+    ``f(start, length) -> (length, R)`` (with ``total_samples`` given), so
+    hour-long campus traces can be synthesized or loaded on the fly without
+    ever materializing (T, R) on the host either.  With ``mesh`` set, each
+    chunk is placed rack-sharded (``shard_racks``) before the step, so the
+    fleet conditions data-parallel across devices.
+    """
+    k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
+    chunk = max(int(chunk_intervals), 1) * k
+    if callable(traces):
+        if total_samples is None:
+            raise ValueError("total_samples is required with a chunk provider")
+        provider, t_total = traces, int(total_samples)
+    else:
+        provider, t_total = (lambda t0, n: traces[t0 : t0 + n]), traces.shape[0]
+
+    state = pdu.init_state(cfg, provider(0, 1)[0], soc0=soc0)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def step(st, tr):
+        grid, st2, telem = pdu.condition(cfg, st, tr, qp_iters=qp_iters)
+        return (
+            st2,
+            jnp.mean(tr, axis=1),
+            jnp.mean(grid, axis=1),
+            jnp.mean(telem.soc, axis=1),
+            jnp.max(telem.qp_residual),
+        )
+
+    campus_rack, campus_grid, soc_mean = [], [], []
+    worst = jnp.asarray(0.0, jnp.float32)
+    for t0 in range(0, t_total, chunk):
+        tr = provider(t0, min(chunk, t_total - t0))
+        if mesh is not None:
+            tr = shard_racks(tr, mesh, rack_axis)
+        state, cr, cg, sm, resid = step(state, tr)
+        campus_rack.append(cr)
+        campus_grid.append(cg)
+        soc_mean.append(sm)
+        worst = jnp.maximum(worst, resid)
+
+    campus_rack = jnp.concatenate(campus_rack)
+    campus_grid = jnp.concatenate(campus_grid)
+    return StreamingFleetResult(
+        campus_rack=campus_rack,
+        campus_grid=campus_grid,
+        soc_mean=jnp.concatenate(soc_mean),
+        report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
+        report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
+        state=state,
+        max_qp_residual=worst,
     )
 
 

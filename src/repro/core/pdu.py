@@ -106,6 +106,7 @@ class PDUState(NamedTuple):
     cmd_applied: jax.Array  # corrective power applied at the last sample
     cmd_target: jax.Array  # corrective power to slew toward this interval
     soc_ema: jax.Array  # BMS measurement filter (slow SoC estimate)
+    qp_warm: ctrl.QPWarmState  # ADMM iterates carried across intervals/chunks
 
 
 def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDUState:
@@ -122,6 +123,7 @@ def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDU
         cmd_applied=jnp.zeros_like(r0),
         cmd_target=jnp.zeros_like(r0),
         soc_ema=jnp.full_like(r0, soc0),
+        qp_warm=ctrl.init_warm(cfg.controller.horizon, r0.shape),
     )
 
 
@@ -129,6 +131,7 @@ class Telemetry(NamedTuple):
     soc: jax.Array  # (n_ctrl, ...) SoC at each control interval
     command: jax.Array  # corrective power commanded per interval
     target: jax.Array  # outer-loop SoC target per interval
+    qp_residual: jax.Array  # QP primal residual per interval (0 if sw off)
 
 
 def condition(
@@ -138,6 +141,7 @@ def condition(
     *,
     idle_remaining_s: jax.Array | float = 0.0,
     qp_iters: int = 120,
+    use_plan: bool = True,
 ) -> tuple[jax.Array, PDUState, Telemetry]:
     """Condition a trace chunk; carries state across calls (streaming).
 
@@ -150,6 +154,14 @@ def condition(
     software tracks slow drift rather than chasing per-iteration workload
     cycling — produces the next slew target.  If T is not a multiple of k
     the trace is zero-order-hold padded and the pad discarded.
+
+    ``use_plan=True`` (default) factors the controller QP once outside the
+    scan (``ctrl.make_plan``), solves all racks as one batched ADMM, and
+    warm-starts each interval from ``state.qp_warm`` — the warm state rides
+    in ``PDUState`` so chunked (streaming) calls stay bit-identical to one
+    whole-trace call.  ``use_plan=False`` keeps the original per-interval
+    build + factor + vmapped-solve path (the oracle for equivalence tests
+    and the cold-start baseline for benchmarks).
     """
     dt = cfg.sample_dt
     k = max(int(round(float(cfg.controller.dt) / dt)), 1)
@@ -169,9 +181,14 @@ def condition(
     ramp01 = jnp.arange(1, k + 1, dtype=jnp.float32).reshape((k,) + (1,) * batch_ndim) / k
 
     ep = cfg.ess_params
+    # Factor-once plan: P, A and the KKT Cholesky depend only on config, so
+    # they are hoisted out of the interval scan (and shared by every rack).
+    plan = ctrl.make_plan(cfg.controller, cfg.ess_params) if (
+        cfg.software_enabled and use_plan
+    ) else None
 
     def interval(carry, rack_chunk):
-        x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, step_idx = carry
+        x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, step_idx = carry
 
         # --- hardware path: fused ESS + SoC + LC simulation --------------
         # (single pass; Pallas kernel on TPU, fused scan elsewhere —
@@ -206,35 +223,54 @@ def condition(
             out = ctrl.inner_loop_step(
                 cfg.controller, cfg.ess_params, soc, s_target, up, qp_iters=qp_iters
             )
-            return out.corrective_power
+            return out.corrective_power, out.qp_primal_residual
 
-        if cfg.software_enabled:
+        if cfg.software_enabled and plan is not None:
+            out, warm2 = ctrl.inner_loop_step_plan(
+                cfg.controller, cfg.ess_params, plan, soc_meas, s_target,
+                u_prev, warm, qp_iters=qp_iters,
+            )
+            new_cmd = out.corrective_power
+            resid = out.qp_primal_residual
+        elif cfg.software_enabled:
             vec_ctrl = run_ctrl
             for _ in range(soc_meas.ndim):
                 vec_ctrl = jax.vmap(vec_ctrl)
-            new_cmd = vec_ctrl(soc_meas, u_prev)
+            new_cmd, resid = vec_ctrl(soc_meas, u_prev)
+            warm2 = warm
         else:
             new_cmd = jnp.zeros_like(soc_meas)
+            resid = jnp.zeros_like(soc_meas)
+            warm2 = warm
         new_u_prev = new_cmd / cfg.controller.i_max
 
-        telem = (es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape))
-        carry2 = (x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas, step_idx + 1)
+        telem = (
+            es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape), resid,
+        )
+        carry2 = (
+            x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
+            warm2, step_idx + 1,
+        )
         return carry2, (grid, telem)
 
     carry0 = (
         state.filter_state, state.ess_state, state.u_prev,
-        state.cmd_applied, state.cmd_target, state.soc_ema,
+        state.cmd_applied, state.cmd_target, state.soc_ema, state.qp_warm,
         jnp.asarray(0.0, jnp.float32),
     )
-    (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, _), (grid_chunks, telem) = (
-        jax.lax.scan(interval, carry0, chunks)
-    )
+    (
+        (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, _),
+        (grid_chunks, telem),
+    ) = jax.lax.scan(interval, carry0, chunks)
     grid = grid_chunks.reshape((n_ctrl * k,) + rack_power.shape[1:])[:t]
     new_state = PDUState(
         filter_state=x_f, filter_obj=filt, ess_state=es_f, u_prev=u_prev,
         cmd_applied=cmd_applied, cmd_target=cmd_target, soc_ema=soc_ema,
+        qp_warm=warm_f,
     )
-    return grid, new_state, Telemetry(soc=telem[0], command=telem[1], target=telem[2])
+    return grid, new_state, Telemetry(
+        soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3]
+    )
 
 
 def combined_transfer_function(cfg: PDUConfig, f_hz: jax.Array) -> jax.Array:

@@ -1,0 +1,12 @@
+"""Pallas-TPU version compat.
+
+``pltpu.CompilerParams`` is the current name of the Mosaic compiler-options
+dataclass; older jax releases (<= 0.4.x) ship it as
+``pltpu.TPUCompilerParams`` with the same fields.  Kernels import
+``CompilerParams`` from here so one source tree runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _pdu_kernel(
     ad_ref, bd_ref, c_ref, s0_ref, r_ref, corr_ref, grid_ref, soc_ref, sf_ref, state,
@@ -149,7 +151,7 @@ def pdu_sim(
             jax.ShapeDtypeStruct((5, r), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((5, r), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(
         ad.astype(jnp.float32),

@@ -7,7 +7,8 @@ jax import; tests and benches see the single real device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.sharding.rules import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -19,13 +20,13 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Debug/test mesh over whatever devices exist (usually 1 CPU)."""
     n = jax.device_count()
     mp = min(model_parallel, n)
-    return jax.make_mesh(
+    return make_mesh(
         (n // mp, mp), ("data", "model"), axis_types=(AxisType.Auto,) * 2
     )

@@ -1,4 +1,20 @@
 """Sharding rules: logical axes -> PartitionSpecs (see rules.py)."""
-from repro.sharding.rules import batch_spec, cache_spec, param_spec, param_specs, shardings
+from repro.sharding.rules import (
+    AxisType,
+    batch_spec,
+    cache_spec,
+    make_mesh,
+    param_spec,
+    param_specs,
+    shardings,
+)
 
-__all__ = ["batch_spec", "cache_spec", "param_spec", "param_specs", "shardings"]
+__all__ = [
+    "AxisType",
+    "batch_spec",
+    "cache_spec",
+    "make_mesh",
+    "param_spec",
+    "param_specs",
+    "shardings",
+]

@@ -18,12 +18,56 @@ distributed) with a note collected for the dry-run report.
 """
 from __future__ import annotations
 
+import enum
+import inspect
 import re
 from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ----------------------------------------------------------- version compat --
+# jax added ``jax.sharding.AxisType`` (and the ``axis_types=`` kwarg of
+# ``jax.make_mesh``) well after 0.4.x; this repo targets both sides of that
+# drift.  All mesh construction goes through ``make_mesh`` below, which
+# forwards ``axis_types`` only when the installed jax understands it.
+
+try:  # jax >= 0.5.x
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on the installed jax
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Fallback for ``jax.sharding.AxisType`` on older jax: carries the
+        same member names so call sites are version-agnostic; the value is
+        simply dropped by ``make_mesh`` (old jax treats every axis as Auto)."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_JAX_MAKE_MESH = getattr(jax, "make_mesh", None)
+_MAKE_MESH_TAKES_AXIS_TYPES = _JAX_MAKE_MESH is not None and (
+    "axis_types" in inspect.signature(_JAX_MAKE_MESH).parameters
+)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None) -> Mesh:
+    """``jax.make_mesh`` across the ``axis_types`` API drift.
+
+    Also covers jax releases predating ``jax.make_mesh`` itself by falling
+    back to a plain ``Mesh`` over a reshaped device array."""
+    if _JAX_MAKE_MESH is None:  # pragma: no cover - depends on installed jax
+        devs = np.asarray(devices if devices is not None else jax.devices())
+        return Mesh(devs.reshape(tuple(axis_shapes)), tuple(axis_names))
+    kw: dict[str, Any] = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kw["axis_types"] = tuple(axis_types)
+    return _JAX_MAKE_MESH(tuple(axis_shapes), tuple(axis_names), **kw)
 
 
 # role -> (axis assignment per tensor dim, counted from the LAST dim)

@@ -183,7 +183,7 @@ def test_v3_active_params_match_published():
     assert abs(n - 37e9) / 37e9 < 0.05
 
 
-from hypothesis import given, settings, strategies as hyp_st
+from _hyp_compat import given, settings, strategies as hyp_st  # optional-hypothesis shim
 
 
 @settings(max_examples=10, deadline=None)

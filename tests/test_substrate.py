@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, strategies as st  # optional-hypothesis shim
 
 from repro.configs import smoke_config
 from repro.data import DataConfig, SyntheticLMDataset
@@ -117,7 +117,8 @@ def test_elastic_restore_different_sharding(tmp_path):
     ck = Checkpointer(str(tmp_path))
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck.save(0, tree, blocking=True)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.sharding import rules
+    mesh = rules.make_mesh((1,), ("data",), axis_types=(rules.AxisType.Auto,))
     sh = {"w": NamedSharding(mesh, P(None, None))}
     _, restored = ck.restore(None, tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
