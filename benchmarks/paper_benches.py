@@ -5,6 +5,7 @@ paper-comparable headline number(s) as a compact string.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -12,7 +13,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import burn, compliance, controller as ctrl, ess, filters, fleet, pdu, sizing
-from repro.power import trace
+from repro.power import scenario as SC, trace
+
+# CI smoke mode (`benchmarks/run.py --quick`): shrink fleet sizes and trace
+# durations so the whole harness doubles as a fast smoke run.
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+
+
+def _q(full, quick):
+    return quick if QUICK else full
 
 
 def _timeit(fn, *args, n=3):
@@ -24,7 +33,8 @@ def _timeit(fn, *args, n=3):
     return (time.perf_counter() - t0) / n * 1e6, out
 
 
-def _conditioned(sample_hz=500.0, duration=240.0, key=0):
+def _conditioned(sample_hz=500.0, duration=None, key=0):
+    duration = duration or _q(240.0, 60.0)
     spec = compliance.GridSpec.create()
     cfg = pdu.make_pdu(sample_dt=1.0 / sample_hz)
     sp = trace.TestbenchSpec(duration_s=duration, sample_hz=sample_hz, terminate_at_s=duration - 30)
@@ -104,7 +114,8 @@ def bench_fig12_soc_management():
     """Fig. 12: SoC drift corrected to S_mid within ~20 min."""
     cfg = ctrl.ControllerConfig.create(i_max=4e-3)
     es = ess.ESSParams.create(q_max_seconds=40.0)
-    f = jax.jit(lambda: ctrl.simulate_soc_management(cfg, es, 0.62, n_steps=400, qp_iters=80)["soc"])
+    n_steps = _q(400, 80)
+    f = jax.jit(lambda: ctrl.simulate_soc_management(cfg, es, 0.62, n_steps=n_steps, qp_iters=80)["soc"])
     us, soc = _timeit(f)
     soc = np.asarray(soc)
     hit = int(np.argmax(np.abs(soc - 0.5) <= float(cfg.deadband)))
@@ -115,7 +126,12 @@ def bench_fig12_soc_management():
 
 def bench_fig13_cluster_fault():
     """Fig. 13: 40 MW cluster with a computation fault at ~400 s."""
-    rack, dt = trace.cluster_fault_trace(jax.random.key(4))
+    import dataclasses
+    spec = trace.cluster_fault_spec()
+    if QUICK:
+        spec = dataclasses.replace(spec, duration_s=150.0, warmup_s=10.0,
+                                   fault_at_s=80.0, terminate_at_s=130.0)
+    rack, dt = trace.testbench_trace(spec, jax.random.key(4))
     cfg = pdu.make_pdu(sample_dt=dt)
     st = pdu.init_state(cfg, rack[0])
     f = jax.jit(lambda s, r: pdu.condition(cfg, s, r, qp_iters=20)[0])
@@ -175,7 +191,7 @@ def bench_fleet_scale():
     """Appendix D at campus scale: 1024 racks, cold-start (seed per-interval
     build + factor + vmapped solve, 120 iters) vs the factor-once
     warm-started batched plan (30 iters) at matched QP primal residual."""
-    n_racks = 1024
+    n_racks = _q(1024, 64)
     sp = trace.TestbenchSpec(duration_s=44.0, sample_hz=200.0)
     t1, dt = trace.testbench_trace(sp, jax.random.key(7))
     racks = fleet.staggered_fleet(t1, n_racks, jax.random.key(8), max_offset_samples=800)
@@ -204,7 +220,7 @@ def bench_controller_throughput():
     """Controller-layer throughput: rack-solves/s, seed cold-start path
     (per-rack _build_qp + cho_factor + 120-iter ADMM, vmapped) vs the
     factor-once plan (one batched 30-iter ADMM, warm-started)."""
-    n_racks = 2048
+    n_racks = _q(2048, 128)
     n_steps = 4
     cfg = ctrl.ControllerConfig.create()
     es = ess.ESSParams.create(q_max_seconds=40.0)
@@ -254,7 +270,7 @@ def bench_fleet_streaming():
     """Streaming campus engine: 1024 racks conditioned in time chunks with
     donated state and on-the-fly chunk synthesis — live HBM stays
     O(chunk x racks) instead of 2x the (T, R) campus trace."""
-    n_racks = 1024
+    n_racks = _q(1024, 64)
     sp = trace.TestbenchSpec(duration_s=60.0, sample_hz=200.0)
     t1, dt = trace.testbench_trace(sp, jax.random.key(7))
     offsets = jax.random.randint(jax.random.key(13), (n_racks,), 0, 800)
@@ -289,6 +305,77 @@ def bench_fleet_streaming():
     )
 
 
+def bench_scenario_render():
+    """Scenario-engine synthesis throughput: host-materialized one-shot
+    (T, R) render vs on-device chunked rendering (the streaming conditioner's
+    chunk provider path).  Derived number is samples/s of campus trace."""
+    n_racks = _q(256, 32)
+    duration = _q(120.0, 30.0)
+    hz = 200.0
+    s = SC.mixed_campus(
+        n_racks,
+        ("llama3_2_1b", "deepseek_v3_671b", "whisper_large_v3"),
+        duration_s=duration,
+        sample_hz=hz,
+        seed=0,
+        noise_seed=1,
+    )
+    t_total = s.total_samples
+    chunk = 4000
+
+    one_shot = lambda: np.asarray(SC.render(s, 0, t_total))  # host-materialized
+    us_full, _ = _timeit(one_shot, n=1)
+
+    def chunked():
+        outs = [SC.render(s, t0, min(chunk, t_total - t0))
+                for t0 in range(0, t_total, chunk)]
+        jax.block_until_ready(outs)
+        return outs
+
+    us_chunk, _ = _timeit(chunked, n=1)
+    total = t_total * n_racks
+    return "scenario_render", us_chunk, (
+        f"samples_per_s host={total / (us_full / 1e6):.2e} "
+        f"chunked={total / (us_chunk / 1e6):.2e} racks={n_racks} T={t_total}"
+    )
+
+
+def bench_mixed_campus():
+    """The heterogeneous-campus acceptance scenario: 1024 racks running 4
+    model-derived workloads + an inference-diurnal block, staggered job
+    starts/stops, and a mid-trace fault cascade — conditioned end-to-end by
+    the streaming engine with on-device chunk synthesis (no (T, R) host
+    materialization ever)."""
+    n_racks = _q(1024, 64)
+    duration = _q(88.0, 30.0)
+    hz = 200.0
+    s = SC.mixed_campus(
+        n_racks,
+        ("llama3_2_1b", "deepseek_v3_671b", "chatglm3_6b", "whisper_large_v3"),
+        duration_s=duration,
+        sample_hz=hz,
+        seed=3,
+        fault_at_s=duration * 0.6,
+        noise_seed=2,
+    )
+    cfg = pdu.make_pdu(sample_dt=1.0 / hz)
+    spec = compliance.GridSpec.create()
+    run = lambda: fleet.condition_scenario_streaming(
+        cfg, s, spec, qp_iters=30, chunk_intervals=4
+    )
+    run()  # compile
+    t0 = time.perf_counter()
+    res = run()
+    jax.block_until_ready(res.campus_grid)
+    us = (time.perf_counter() - t0) * 1e6
+    rg = float(res.report_grid.max_ramp)
+    return "mixed_campus_fleet", us, (
+        f"racks={n_racks} workloads=5 campus_ramp={rg:.4f}/s "
+        f"ok={bool(res.report_grid.ramp_ok)} raw_ok={bool(res.report_rack.ramp_ok)} "
+        f"us_per_rack={us / n_racks:.0f} qp_resid={float(res.max_qp_residual):.2e}"
+    )
+
+
 ALL = [
     bench_fig7_frequency_response,
     bench_fig9_ramp_rate,
@@ -301,4 +388,6 @@ ALL = [
     bench_controller_throughput,
     bench_fleet_scale,
     bench_fleet_streaming,
+    bench_scenario_render,
+    bench_mixed_campus,
 ]

@@ -7,6 +7,7 @@ the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -16,6 +17,22 @@ _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="CI smoke mode: shrink fleet sizes / trace durations and skip "
+        "writing BENCH_power.json (timings are not comparable)",
+    )
+    args = ap.parse_args()
+    # A pre-set env var also selects quick sizes (they bind when the bench
+    # modules import), so treat it exactly like --quick — otherwise quick
+    # timings would silently overwrite the tracked BENCH_power.json.
+    quick = args.quick or os.environ.get("REPRO_BENCH_QUICK", "") == "1"
+    if quick:
+        # must be set before the bench modules import (sizes bind at import)
+        os.environ["REPRO_BENCH_QUICK"] = "1"
+
     # Make both ``repro`` and the ``benchmarks`` package importable when run
     # as a plain script (``python benchmarks/run.py``) from anywhere.
     sys.path.insert(0, _REPO_ROOT)
@@ -35,11 +52,14 @@ def main() -> None:
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
         sys.stdout.flush()
 
-    out_path = os.path.join(_REPO_ROOT, "BENCH_power.json")
-    with open(out_path, "w") as f:
-        json.dump(records, f, indent=2, sort_keys=True)
-        f.write("\n")
-    print(f"# wrote {out_path} ({len(records)} benches)")
+    if quick:
+        print(f"# --quick smoke run: BENCH_power.json not written ({len(records)} benches ran)")
+    else:
+        out_path = os.path.join(_REPO_ROOT, "BENCH_power.json")
+        with open(out_path, "w") as f:
+            json.dump(records, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {out_path} ({len(records)} benches)")
 
     # roofline summary from dry-run records, if present
     recs = sorted(glob.glob("experiments/dryrun/*__16_16.json"))

@@ -50,6 +50,28 @@ def smoke_config(arch: str, **overrides) -> ModelConfig:
     return _override(cfg, overrides)
 
 
+def step_cost(arch: str, *, tokens_per_step: float = 2**20, opt_bytes: float = 18.0):
+    """Per-step aggregate cost of training ``arch``: the bridge from the 10
+    assigned model configs to the power layer's phase/scenario models.
+
+    FLOPs use the standard 6*N_active*tokens accounting; HBM traffic is the
+    per-step parameter/gradient/optimizer sweep (``opt_bytes`` bytes per
+    parameter ~ bf16 params+grads + fp32 m/v read+write, amortized);
+    collective bytes are a 2-pass bf16 ring all-reduce of the gradients.
+    Returns ``repro.power.phases.StepCost``.
+    """
+    from repro.power.phases import StepCost
+
+    cfg = full_config(arch)
+    n_full = cfg.param_count()
+    n_active = cfg.active_param_count()
+    return StepCost(
+        flops=6.0 * n_active * tokens_per_step,
+        hbm_bytes=opt_bytes * n_full,
+        collective_bytes=4.0 * n_full,
+    )
+
+
 def _override(cfg: ModelConfig, overrides) -> ModelConfig:
     if overrides:
         import dataclasses

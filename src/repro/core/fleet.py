@@ -171,13 +171,23 @@ def condition_fleet_streaming(
     campus_rack, campus_grid, soc_mean = [], [], []
     worst = jnp.asarray(0.0, jnp.float32)
     for t0 in range(0, t_total, chunk):
-        tr = provider(t0, min(chunk, t_total - t0))
+        n_real = min(chunk, t_total - t0)
+        tr = provider(t0, n_real)
+        if n_real < chunk:
+            # ZOH-pad the trailing partial chunk to the full chunk shape so
+            # `step` compiles exactly once; the pad is sliced off the campus
+            # aggregates below.  (pdu.condition already ZOH-pads ragged
+            # trailing controller intervals internally, so the carried state
+            # sees the same hold — just for the remaining pad intervals too.)
+            tr = jnp.concatenate(
+                [tr, jnp.repeat(tr[-1:], chunk - n_real, axis=0)], axis=0
+            )
         if mesh is not None:
             tr = shard_racks(tr, mesh, rack_axis)
         state, cr, cg, sm, resid = step(state, tr)
-        campus_rack.append(cr)
-        campus_grid.append(cg)
-        soc_mean.append(sm)
+        campus_rack.append(cr[:n_real])
+        campus_grid.append(cg[:n_real])
+        soc_mean.append(sm[: -(-n_real // k)])
         worst = jnp.maximum(worst, resid)
 
     campus_rack = jnp.concatenate(campus_rack)
@@ -190,6 +200,38 @@ def condition_fleet_streaming(
         report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
         state=state,
         max_qp_residual=worst,
+    )
+
+
+def condition_scenario_streaming(
+    cfg: pdu.PDUConfig,
+    scenario,
+    grid_spec: compliance.GridSpec,
+    **kwargs,
+) -> StreamingFleetResult:
+    """Condition a declarative ``repro.power.scenario.Scenario`` fleet.
+
+    The scenario's ``render(s, t0, n)`` is the chunk provider: each (n, R)
+    chunk is synthesized on-device and conditioned in place, so campus-scale
+    heterogeneous fleets (per-rack model workloads, staggered starts, fault
+    cascades, diurnal inference blocks) stream end-to-end without a (T, R)
+    host materialization.  This is the scenario-native successor to
+    ``staggered_fleet`` + ``apply_failures``, which express offsets/failures
+    by materializing and mutating whole trace arrays.
+    """
+    from repro.power import scenario as SC
+
+    if abs(1.0 / scenario.sample_hz - cfg.sample_dt) > 1e-9:
+        raise ValueError(
+            f"scenario sample rate {scenario.sample_hz} Hz != PDU sample_dt "
+            f"{cfg.sample_dt} s; build the PDU with sample_dt=1/sample_hz"
+        )
+    return condition_fleet_streaming(
+        cfg,
+        SC.chunk_provider(scenario),
+        grid_spec,
+        total_samples=scenario.total_samples,
+        **kwargs,
     )
 
 

@@ -1,4 +1,5 @@
-"""Workload power modeling: device states, phase timelines, trace synthesis."""
-from repro.power import device, phases, trace
+"""Workload power modeling: device states, phase timelines, scenario engine,
+trace synthesis."""
+from repro.power import device, phases, scenario, trace
 
-__all__ = ["device", "phases", "trace"]
+__all__ = ["device", "phases", "scenario", "trace"]

@@ -20,14 +20,17 @@ import numpy as np
 
 from repro.core import compliance, pdu
 from repro.power import phases as P
-from repro.power import trace as TR
+from repro.power import scenario as SC
+from repro.power.device import DevicePower
 
 
 @dataclasses.dataclass
 class PowerSimConfig:
     sample_hz: float = 200.0
     grid: compliance.GridSpec | None = None
-    device = None  # power.device.DevicePower; default TPU_V5E
+    # Accelerator power model driving phase rendering (idle/comm power
+    # fractions); None keeps the PhaseModel's own device (default TPU_V5E).
+    device: DevicePower | None = None
 
 
 class PowerSim:
@@ -40,6 +43,8 @@ class PowerSim:
     ):
         self.cfg = cfg or PowerSimConfig()
         self.grid_spec = self.cfg.grid or compliance.GridSpec.create()
+        if self.cfg.device is not None:
+            model = dataclasses.replace(model, device=self.cfg.device)
         self.cost = cost
         self.hw = hw
         self.model = model
@@ -80,8 +85,11 @@ class PowerSim:
             durs = np.append(durs, self.model.checkpoint_stall_s)
             d = self.model.device
             pows = np.append(pows, d.p_idle_w / d.p_peak_w)
-        trace, dt = TR.phase_timeline_trace(durs, pows, self.cfg.sample_hz)
-        self._condition(np.asarray(trace, np.float32), dt)
+        # Compile the step's phases into the scenario IR and render the
+        # chunk on-device (steps share a shape, so `render` stays cached).
+        s = SC.from_phase_timeline(durs, pows, self.cfg.sample_hz)
+        chunk, dt = SC.render_trace(s)
+        self._condition(np.asarray(chunk, np.float32), dt)
 
     def report(self) -> dict:
         rack = np.concatenate(self.rack_trace_chunks) if self.rack_trace_chunks else np.zeros(1)

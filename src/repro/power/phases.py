@@ -88,30 +88,52 @@ def training_timeline(
     warmup_levels: int = 20,
     end_idle_s: float = 10.0,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """A full job timeline: warmup ramp, steps (+checkpoint stalls), end drop."""
+    """A full job timeline: warmup ramp, steps (+checkpoint stalls), end drop.
+
+    Fully vectorized phase-list construction (tile + insert); compile the
+    result into the renderable scenario IR with ``training_scenario``.
+    """
     d = model.device
     p_idle = d.p_idle_w / d.p_peak_w
-
-    durs: list[float] = []
-    pows: list[float] = []
 
     # Staggered warm-up ramp (control planes stagger job starts, §2.2).
     step_d, step_p = step_phases(cost, hw, model)
     p_avg = float(np.sum(step_d * step_p) / np.sum(step_d))
-    for i in range(warmup_levels):
-        durs.append(warmup_s / warmup_levels)
-        pows.append(p_idle + (p_avg - p_idle) * (i + 1) / warmup_levels)
+    levels = np.arange(1, warmup_levels + 1, dtype=np.float64)
+    warm_d = np.full(warmup_levels, warmup_s / warmup_levels)
+    warm_p = p_idle + (p_avg - p_idle) * levels / warmup_levels
 
-    for s in range(n_steps):
-        durs.extend(step_d.tolist())
-        pows.extend(step_p.tolist())
-        if model.checkpoint_every_steps and (s + 1) % model.checkpoint_every_steps == 0:
-            durs.append(model.checkpoint_stall_s)
-            pows.append(p_idle)
+    durs = np.tile(step_d, n_steps)
+    pows = np.tile(step_p.astype(np.float64), n_steps)
+    c = model.checkpoint_every_steps
+    if c:
+        n_stalls = n_steps // c
+        # insert a stall after every c-th step (each step = len(step_d) phases)
+        at = np.arange(1, n_stalls + 1) * c * step_d.shape[0]
+        durs = np.insert(durs, at, model.checkpoint_stall_s)
+        pows = np.insert(pows, at, p_idle)
 
-    durs.append(end_idle_s)
-    pows.append(p_idle)
-    return np.asarray(durs), np.asarray(pows, np.float32)
+    durs = np.concatenate([warm_d, durs, [end_idle_s]])
+    pows = np.concatenate([warm_p, pows, [p_idle]])
+    return durs, pows.astype(np.float32)
+
+
+def training_scenario(
+    cost: StepCost,
+    hw: HardwareConstants,
+    model: PhaseModel,
+    n_steps: int,
+    sample_hz: float,
+    *,
+    edge_time_s: float = 0.1,
+    **timeline_kwargs,
+):
+    """Compile a training job's phase timeline straight into the scenario IR
+    (`repro.power.scenario`): returns a renderable segment-table Scenario."""
+    from repro.power import scenario as SC
+
+    durs, pows = training_timeline(cost, hw, model, n_steps, **timeline_kwargs)
+    return SC.from_phase_timeline(durs, pows, sample_hz, edge_time_s=edge_time_s)
 
 
 def step_fundamental_hz(cost: StepCost, hw: HardwareConstants, model: PhaseModel) -> float:

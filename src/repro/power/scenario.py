@@ -1,0 +1,543 @@
+"""Declarative scenario engine: workload events -> batched, chunk-renderable traces.
+
+The legacy trace layer (`repro.power.trace`) synthesizes one homogeneous
+square-wave per call with host-side Python branches, and fleet heterogeneity
+is bolted on by rolling copies of that one trace.  This module replaces the
+construction with *data*: a scenario is a small struct-of-arrays IR —
+
+  * ``WorkloadParams``: the parametric per-rack workload (warmup ramp,
+    iteration compute/communicate wave, periodic checkpoint dips, job
+    start/stop envelope, fault window, diurnal inference envelope, noise)
+    with every knob a float32 leaf, so a heterogeneous fleet is just a
+    ``WorkloadParams`` whose leaves carry a trailing rack axis ``(R,)``;
+  * an optional explicit segment table (``seg_bounds``/``seg_powers``) for
+    compiled phase timelines (`repro.power.phases`), piecewise-constant
+    power looked up by sample index.
+
+``render(scenario, t0, n)`` is a pure jit-ed function of the *absolute*
+sample index: every output sample depends only on its own index (the edge
+smoothing is an explicit zero-padded window mean with a fixed reduction
+order), so chunked rendering is **bit-identical** to whole-trace rendering
+and the signature plugs directly into
+``fleet.condition_fleet_streaming``'s chunk provider — campus-scale traces
+are synthesized on-device per chunk and never materialized as (T, R).
+
+Workload parameters for the assigned model architectures are derived from
+their step cost (``workload_from_model`` / ``scenario_from_model``), and
+``mixed_campus`` builds the paper's heterogeneous-campus evaluation: many
+models, staggered job starts/stops, an inference-diurnal block, and a
+mid-trace fault cascade.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import pytree_dataclass, static_field
+
+# "never happens" sentinel for event times; float32-representable and far
+# beyond any trace, so `t >= NEVER` comparisons are exactly False in-band.
+NEVER = 1e30
+
+
+@pytree_dataclass
+class WorkloadParams:
+    """Parametric per-rack workload (struct-of-arrays).
+
+    Every field is a float32 leaf of shape ``()`` (one rack) or ``(R,)``
+    (per-rack batch); heterogeneous fleets fall out of broadcasting the
+    time axis against the trailing rack axis.  Defaults mirror
+    ``trace.TestbenchSpec`` (Choukse et al. Fig. 1 structure).
+    """
+
+    # Iteration wave: compute plateau with a comm window at the cycle end.
+    iteration_period_s: jax.Array
+    comm_fraction: jax.Array
+    p_compute: jax.Array
+    p_comm: jax.Array
+    # Periodic deep dips (checkpoint stalls).
+    dip_period_s: jax.Array
+    dip_duration_s: jax.Array
+    p_dip: jax.Array
+    # Job envelope: idle -> warmup ramp at t_start, drop to idle at t_end.
+    warmup_s: jax.Array
+    p_idle: jax.Array
+    t_start_s: jax.Array
+    t_end_s: jax.Array
+    # Fault window: near-instant drop, bypasses edge smoothing (Fig. 13).
+    fault_at_s: jax.Array
+    fault_duration_s: jax.Array
+    p_fault: jax.Array
+    # Diurnal inference envelope: amp=0 disables (exact no-op); amp in
+    # (0, 1] swings the load between full and (1-amp) of its workload
+    # excursion over p_idle, with period diurnal_period_s.
+    diurnal_period_s: jax.Array
+    diurnal_amp: jax.Array
+    diurnal_phase_s: jax.Array
+    # Per-rack output scale and measurement-noise level.
+    scale: jax.Array
+    noise_std: jax.Array
+
+
+def workload(
+    *,
+    iteration_period_s=22.0,
+    comm_fraction=0.114,
+    p_compute=0.92,
+    p_comm=0.25,
+    dip_period_s=110.0,
+    dip_duration_s=3.0,
+    p_dip=0.15,
+    warmup_s=8.0,
+    p_idle=0.10,
+    t_start_s=0.0,
+    t_end_s=NEVER,
+    fault_at_s=NEVER,
+    fault_duration_s=20.0,
+    p_fault=0.02,
+    diurnal_period_s=NEVER,
+    diurnal_amp=0.0,
+    diurnal_phase_s=0.0,
+    scale=1.0,
+    noise_std=0.01,
+) -> WorkloadParams:
+    """Build ``WorkloadParams`` from keyword knobs (scalars or (R,) arrays)."""
+    as32 = lambda x: jnp.asarray(x, jnp.float32)
+    return WorkloadParams(
+        iteration_period_s=as32(iteration_period_s),
+        comm_fraction=as32(comm_fraction),
+        p_compute=as32(p_compute),
+        p_comm=as32(p_comm),
+        dip_period_s=as32(dip_period_s),
+        dip_duration_s=as32(dip_duration_s),
+        p_dip=as32(p_dip),
+        warmup_s=as32(warmup_s),
+        p_idle=as32(p_idle),
+        t_start_s=as32(t_start_s),
+        t_end_s=as32(t_end_s),
+        fault_at_s=as32(fault_at_s),
+        fault_duration_s=as32(fault_duration_s),
+        p_fault=as32(p_fault),
+        diurnal_period_s=as32(diurnal_period_s),
+        diurnal_amp=as32(diurnal_amp),
+        diurnal_phase_s=as32(diurnal_phase_s),
+        scale=as32(scale),
+        noise_std=as32(noise_std),
+    )
+
+
+def stack_workloads(params_list: list[WorkloadParams]) -> WorkloadParams:
+    """Stack per-rack scalar params into one (R,)-batched ``WorkloadParams``."""
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.broadcast_to(x, ()) for x in xs]), *params_list
+    )
+
+
+@pytree_dataclass
+class Scenario:
+    """A renderable scenario: parametric workloads and/or a segment table.
+
+    If ``seg_powers`` is present the base waveform is the piecewise-constant
+    segment lookup (``seg_bounds`` holds int32 start-sample indices,
+    ``seg_bounds[0] == 0``; ``seg_powers`` is ``(K,)`` shared or ``(R, K)``
+    per-rack); otherwise it is the parametric ``params`` workload.  Static
+    fields (sample rate, length, smoothing width, noise seed) are jit aux
+    data, so one compiled ``render`` serves every chunk.
+    """
+
+    params: WorkloadParams | None
+    seg_bounds: jax.Array | None
+    seg_powers: jax.Array | None
+    # Noise level for segment-table scenarios (parametric scenarios carry
+    # theirs in ``params.noise_std``); None = 0.
+    seg_noise_std: jax.Array | None = None
+    sample_hz: float = static_field(default=1000.0)
+    total_samples: int = static_field(default=0)
+    # Edge smoothing window in samples (0/1 = off): steps become linear
+    # ramps of ~edge_width*dt, identical to the legacy boxcar convolution.
+    edge_width: int = static_field(default=0)
+    # Counter-based noise: sample i draws from fold_in(key(seed), i), so
+    # noise is chunk-invariant.  None disables noise entirely.
+    noise_seed: int | None = static_field(default=None)
+
+    @property
+    def duration_s(self) -> float:
+        return self.total_samples / self.sample_hz
+
+    @property
+    def dt(self) -> float:
+        return 1.0 / self.sample_hz
+
+    @property
+    def n_racks(self) -> int | None:
+        """Rack batch size, or None for an unbatched (T,) scenario."""
+        if self.seg_powers is not None and self.seg_powers.ndim == 2:
+            return self.seg_powers.shape[0]
+        if self.params is not None:
+            for leaf in jax.tree_util.tree_leaves(self.params):
+                if jnp.ndim(leaf) == 1:
+                    return leaf.shape[0]
+        return None
+
+
+def make_scenario(
+    params: WorkloadParams,
+    *,
+    duration_s: float,
+    sample_hz: float,
+    edge_time_s: float = 0.25,
+    noise_seed: int | None = None,
+) -> Scenario:
+    """Wrap parametric workloads into a renderable ``Scenario``."""
+    return Scenario(
+        params=params,
+        seg_bounds=None,
+        seg_powers=None,
+        sample_hz=float(sample_hz),
+        total_samples=int(round(duration_s * sample_hz)),
+        edge_width=_edge_width(edge_time_s, sample_hz),
+        noise_seed=noise_seed,
+    )
+
+
+def _edge_width(edge_time_s: float, sample_hz: float) -> int:
+    return max(int(round(edge_time_s * sample_hz)), 1) if edge_time_s > 0 else 0
+
+
+# ------------------------------------------------------------------ rendering
+
+
+def _parametric_base(w: WorkloadParams, t: jax.Array, dt: float) -> jax.Array:
+    """Per-sample base power at times ``t`` (seconds); pure and elementwise.
+
+    Ordering matches the legacy ``testbench_trace`` exactly (wave -> dips ->
+    warmup ramp -> envelope) so that with default start/diurnal/scale the
+    pre-smoothing samples are bitwise-identical to the legacy path.
+    """
+    batched = any(jnp.ndim(x) == 1 for x in jax.tree_util.tree_leaves(w))
+    if batched:
+        t = t[:, None]
+    te = t - w.t_start_s  # job-local time (staggered starts)
+
+    phase = jnp.mod(te, w.iteration_period_s) / w.iteration_period_s
+    p = jnp.where(phase >= 1.0 - w.comm_fraction, w.p_comm, w.p_compute)
+    # NEVER disables dips entirely (mod(te, NEVER) == te would otherwise
+    # fire a spurious dip for the first dip_duration_s of every job).
+    in_dip = (jnp.mod(te, w.dip_period_s) < w.dip_duration_s) & (
+        w.dip_period_s < 0.5 * NEVER
+    )
+    p = jnp.where(in_dip, w.p_dip, p)
+    ramp = jnp.clip(te / jnp.maximum(w.warmup_s, dt), 0.0, 1.0)
+    p = w.p_idle + ramp * (p - w.p_idle)
+    # Diurnal inference envelope (amp=0 keeps p bitwise-unchanged).
+    period = jnp.maximum(w.diurnal_period_s, dt)
+    env = 1.0 - w.diurnal_amp * 0.5 * (
+        1.0 - jnp.cos(2.0 * jnp.pi * (t - w.diurnal_phase_s) / period)
+    )
+    p = jnp.where(w.diurnal_amp > 0.0, w.p_idle + env * (p - w.p_idle), p)
+    # Outside the job window the rack idles (termination is abrupt).
+    return jnp.where((te < 0.0) | (t >= w.t_end_s), w.p_idle, p)
+
+
+def _segment_base(s: Scenario, idx: jax.Array) -> jax.Array:
+    j = jnp.clip(
+        jnp.searchsorted(s.seg_bounds, idx, side="right") - 1,
+        0,
+        s.seg_bounds.shape[0] - 1,
+    )
+    if s.seg_powers.ndim == 2:
+        return s.seg_powers[:, j].T  # (n, R)
+    return s.seg_powers[j]
+
+
+def _base(s: Scenario, idx: jax.Array) -> jax.Array:
+    if s.seg_powers is not None:
+        return _segment_base(s, idx)
+    return _parametric_base(s.params, idx.astype(jnp.float32) * s.dt, s.dt)
+
+
+def _pairwise_sum(xs: list[jax.Array]) -> jax.Array:
+    """Fixed-topology pairwise sum: reduction order is independent of the
+    chunk offset, which is what makes chunked == whole bit-identical."""
+    while len(xs) > 1:
+        nxt = [xs[i] + xs[i + 1] for i in range(0, len(xs) - 1, 2)]
+        if len(xs) % 2:
+            nxt.append(xs[-1])
+        xs = nxt
+    return xs[0]
+
+
+def _render_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
+    t0 = jnp.asarray(t0, jnp.int32)
+    idx = t0 + jnp.arange(n, dtype=jnp.int32)
+    w = s.edge_width
+    if w > 1:
+        # Zero-padded window mean over [i-(w-1-c), i+c], c=(w-1)//2 — the
+        # exact window of jnp.convolve(p, ones(w)/w, mode="same").
+        c = (w - 1) // 2
+        lo = w - 1 - c
+        eidx = (t0 - lo) + jnp.arange(n + w - 1, dtype=jnp.int32)
+        base = _base(s, eidx)
+        valid = (eidx >= 0) & (eidx < s.total_samples)
+        base = jnp.where(valid if base.ndim == 1 else valid[:, None], base, 0.0)
+        p = _pairwise_sum([base[j : j + n] for j in range(w)]) / w
+    else:
+        p = _base(s, idx)
+
+    wp = s.params
+    if wp is not None:
+        # Fault window bypasses edge smoothing: the near-instant drop is the
+        # point (paper Fig. 13).
+        t = idx.astype(jnp.float32) * s.dt
+        tb = t[:, None] if p.ndim == 2 else t
+        in_fault = (tb >= wp.fault_at_s) & (tb < wp.fault_at_s + wp.fault_duration_s)
+        p = jnp.where(in_fault, wp.p_fault, p)
+
+    if s.noise_seed is not None:
+        key = jax.random.key(s.noise_seed)
+        tail = p.shape[1:]  # () or (R,)
+        noise = jax.vmap(
+            lambda i: jax.random.normal(jax.random.fold_in(key, i), tail)
+        )(idx)
+        if wp is not None:
+            std = wp.noise_std
+        else:
+            std = s.seg_noise_std if s.seg_noise_std is not None else 0.0
+        p = jnp.clip(p + std * noise, 0.0, 1.0)
+
+    if wp is not None:
+        p = p * wp.scale
+    return p.astype(jnp.float32)
+
+
+render = jax.jit(_render_impl, static_argnames="n")
+render.__doc__ = """Render ``n`` samples starting at absolute sample ``t0``.
+
+Returns ``(n,)`` for an unbatched scenario or ``(n, R)`` for a per-rack
+batch.  Pure in the absolute index: ``render(s, 0, T)`` equals the
+concatenation of any chunking ``render(s, t0, n)`` bit-for-bit, so it
+serves directly as a streaming chunk provider (``chunk_provider``).
+"""
+
+
+def render_trace(s: Scenario) -> tuple[jax.Array, float]:
+    """Render the whole scenario; returns ``(trace, dt)`` like the legacy API."""
+    return render(s, 0, s.total_samples), s.dt
+
+
+def chunk_provider(s: Scenario):
+    """A ``f(t0, n) -> (n, R)`` chunk provider for
+    ``fleet.condition_fleet_streaming`` — chunks are synthesized on-device,
+    never materialized as (T, R) on the host."""
+
+    def provider(t0: int, n: int) -> jax.Array:
+        return render(s, t0, int(n))
+
+    return provider
+
+
+# ------------------------------------------------- compiled phase timelines
+
+
+def from_phase_timeline(
+    durations_s,
+    powers,
+    sample_hz: float,
+    *,
+    edge_time_s: float = 0.1,
+    noise_seed: int | None = None,
+    noise_std: float = 0.01,
+) -> Scenario:
+    """Compile an explicit phase timeline into a segment-table scenario.
+
+    Matches ``trace.phase_timeline_trace``'s discretization: each phase gets
+    ``max(round(duration*hz), 1)`` samples and transitions get boxcar edges.
+    ``powers`` may be ``(K,)`` or a per-rack ``(R, K)``.  Measurement noise
+    at ``noise_std`` is enabled by passing ``noise_seed``.
+    """
+    durations = np.asarray(durations_s, np.float64)
+    counts = np.maximum(np.round(durations * sample_hz).astype(np.int64), 1)
+    bounds = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int32)
+    powers = jnp.asarray(powers, jnp.float32)
+    return Scenario(
+        params=None,
+        seg_bounds=jnp.asarray(bounds),
+        seg_powers=powers,
+        seg_noise_std=jnp.asarray(noise_std, jnp.float32),
+        sample_hz=float(sample_hz),
+        total_samples=int(counts.sum()),
+        edge_width=_edge_width(edge_time_s, sample_hz),
+        noise_seed=noise_seed,
+    )
+
+
+# ------------------------------------------------------- model-derived racks
+
+
+def workload_from_model(
+    arch: str,
+    *,
+    hw=None,
+    phase_model=None,
+    tokens_per_step: float = 2**20,
+    min_exposed_fraction: float = 0.08,
+    **overrides,
+) -> WorkloadParams:
+    """Derive a rack workload from an assigned model config's step cost.
+
+    Uses ``configs.registry.step_cost`` (6*N*tokens FLOPs and
+    parameter-traffic byte counts) through ``phases.step_phases`` to place
+    the iteration wave: the compute plateau lasts the step's busy time and
+    the comm window its exposed-collective time.  Well-overlapped small
+    models would expose almost nothing, which would erase the square wave
+    the grid actually sees (paper Fig. 3), so the exposed fraction is
+    floored at ``min_exposed_fraction`` of the busy time.  Checkpoint stalls
+    become the periodic deep dips.
+    """
+    from repro.configs import registry
+    from repro.power import phases as P
+
+    hw = hw or P.HardwareConstants()
+    pm = phase_model or P.PhaseModel()
+    cost = registry.step_cost(arch, tokens_per_step=tokens_per_step)
+    d, pw = P.step_phases(cost, hw, pm)
+    t_busy = float(d[0])
+    t_exposed = max(float(d[1]), min_exposed_fraction * t_busy)
+    period = t_busy + t_exposed
+    dev = pm.device
+    p_idle = dev.p_idle_w / dev.p_peak_w
+    knobs = dict(
+        iteration_period_s=period,
+        comm_fraction=t_exposed / period,
+        p_compute=float(pw[0]),
+        p_comm=float(pw[1]),
+        dip_period_s=(
+            pm.checkpoint_every_steps * period if pm.checkpoint_every_steps else NEVER
+        ),
+        dip_duration_s=pm.checkpoint_stall_s,
+        p_dip=p_idle,
+        p_idle=p_idle,
+        warmup_s=10.0,
+    )
+    knobs.update(overrides)
+    return workload(**knobs)
+
+
+def scenario_from_model(
+    arch: str,
+    *,
+    duration_s: float = 240.0,
+    sample_hz: float = 200.0,
+    edge_time_s: float = 0.25,
+    noise_seed: int | None = None,
+    **kwargs,
+) -> Scenario:
+    """One rack running one assigned model, as a renderable scenario."""
+    return make_scenario(
+        workload_from_model(arch, **kwargs),
+        duration_s=duration_s,
+        sample_hz=sample_hz,
+        edge_time_s=edge_time_s,
+        noise_seed=noise_seed,
+    )
+
+
+def inference_workload(
+    *,
+    p_idle: float = 0.15,
+    p_peak: float = 0.75,
+    diurnal_period_s: float = 600.0,
+    diurnal_amp: float = 0.85,
+    diurnal_phase_s: float = 0.0,
+    iteration_period_s: float = 0.5,
+    comm_fraction: float = 0.2,
+    **overrides,
+) -> WorkloadParams:
+    """A serving rack: fast shallow batching ripple under a deep diurnal
+    envelope (the Ko & Zhu / Li et al. grid-risk profile)."""
+    knobs = dict(
+        iteration_period_s=iteration_period_s,
+        comm_fraction=comm_fraction,
+        p_compute=p_peak,
+        p_comm=p_peak * 0.8,
+        dip_period_s=NEVER,
+        dip_duration_s=0.0,
+        p_dip=p_idle,
+        p_idle=p_idle,
+        warmup_s=5.0,
+        diurnal_period_s=diurnal_period_s,
+        diurnal_amp=diurnal_amp,
+        diurnal_phase_s=diurnal_phase_s,
+    )
+    knobs.update(overrides)
+    return workload(**knobs)
+
+
+def mixed_campus(
+    n_racks: int,
+    archs: tuple[str, ...],
+    *,
+    duration_s: float = 240.0,
+    sample_hz: float = 200.0,
+    seed: int = 0,
+    inference_fraction: float = 0.25,
+    stagger_s: float = 30.0,
+    stop_fraction: float = 0.15,
+    fault_rack_fraction: float = 0.1,
+    fault_at_s: float | None = None,
+    fault_cascade_s: float = 5.0,
+    fault_duration_s: float = 30.0,
+    edge_time_s: float = 0.25,
+    noise_seed: int | None = None,
+) -> Scenario:
+    """A heterogeneous campus: training racks cycling different assigned
+    models, an inference-diurnal block, staggered job starts, a subset of
+    early job terminations, and a mid-trace fault cascade rippling across a
+    contiguous rack range.  Entirely data — one (R,)-batched scenario."""
+    import dataclasses
+
+    rng = np.random.default_rng(seed)
+    n_inf = int(round(n_racks * inference_fraction))
+    n_train = n_racks - n_inf
+
+    # Assemble the per-rack parameter columns on the host (numpy) and
+    # convert each leaf exactly once — a 1024-rack campus is 19 transfers,
+    # not 19 x (R+1) tiny device ops.
+    as_floats = lambda w: jax.tree_util.tree_map(float, w)
+    train_templates = [as_floats(workload_from_model(a)) for a in archs]
+    inf_template = as_floats(inference_workload(diurnal_period_s=duration_s / 1.5))
+    cols: dict[str, np.ndarray] = {}
+    for f in dataclasses.fields(WorkloadParams):
+        train_vals = [
+            getattr(train_templates[i % len(train_templates)], f.name)
+            for i in range(n_train)
+        ]
+        cols[f.name] = np.asarray(
+            train_vals + [getattr(inf_template, f.name)] * n_inf, np.float32
+        )
+    cols["diurnal_phase_s"][n_train:] = rng.uniform(0.0, duration_s, n_inf)
+
+    cols["t_start_s"] = rng.uniform(0.0, stagger_s, n_racks).astype(np.float32)
+    n_stop = int(round(n_racks * stop_fraction))
+    stop_idx = rng.choice(n_racks, size=n_stop, replace=False)
+    cols["t_end_s"][stop_idx] = rng.uniform(0.7, 0.95, n_stop) * duration_s
+
+    n_fault = int(round(n_racks * fault_rack_fraction))
+    if n_fault:
+        f0 = duration_s * 0.6 if fault_at_s is None else fault_at_s
+        lo = int(rng.integers(0, max(n_racks - n_fault, 1)))
+        # cascade: the fault ripples across the contiguous rack range
+        cols["fault_at_s"][lo : lo + n_fault] = f0 + np.linspace(
+            0.0, fault_cascade_s, n_fault, dtype=np.float32
+        )
+    cols["fault_duration_s"] = np.full(n_racks, fault_duration_s, np.float32)
+    cols["scale"] = (1.0 + 0.05 * rng.uniform(-1.0, 1.0, n_racks)).astype(np.float32)
+    params = WorkloadParams(**{k: jnp.asarray(v) for k, v in cols.items()})
+    return make_scenario(
+        params,
+        duration_s=duration_s,
+        sample_hz=sample_hz,
+        edge_time_s=edge_time_s,
+        noise_seed=noise_seed,
+    )

@@ -8,10 +8,12 @@ line in paper Fig. 3b), a warm-up ramp, an abrupt job termination, and
 optional mid-trace fault events (paper Fig. 13's 193.7 MW/s drop).
 
 All traces are per-unit (fractions of rated rack power) at a configurable
-sample rate.  ``phase_timeline_trace`` converts an explicit phase timeline
-(from ``repro.power.phases``) into a trace — that path is used by the
-trainer's PowerSim integration, where phases come from the *actual* compiled
-step's cost analysis.
+sample rate.  Synthesis itself lives in the declarative scenario engine
+(`repro.power.scenario`); this module keeps the legacy entry points as thin
+wrappers over that IR — ``TestbenchSpec`` compiles to a parametric
+``scenario.WorkloadParams`` and ``phase_timeline_trace`` to a segment-table
+scenario.  The original host-side implementations are preserved as
+``*_reference`` golden oracles for the scenario↔legacy equivalence tests.
 """
 from __future__ import annotations
 
@@ -20,6 +22,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.power import scenario as SC
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,8 +59,56 @@ class TestbenchSpec:
     noise_std: float = 0.01
 
 
+def scenario_from_testbench(
+    spec: TestbenchSpec, *, noise_seed: int | None = None
+) -> SC.Scenario:
+    """Compile a ``TestbenchSpec`` into the scenario IR."""
+    params = SC.workload(
+        iteration_period_s=spec.iteration_period_s,
+        comm_fraction=spec.comm_fraction,
+        p_compute=spec.p_compute,
+        p_comm=spec.p_comm,
+        dip_period_s=spec.dip_period_s,
+        dip_duration_s=spec.dip_duration_s,
+        p_dip=spec.p_dip,
+        warmup_s=spec.warmup_s,
+        p_idle=spec.p_idle,
+        t_end_s=SC.NEVER if spec.terminate_at_s is None else spec.terminate_at_s,
+        fault_at_s=SC.NEVER if spec.fault_at_s is None else spec.fault_at_s,
+        fault_duration_s=spec.fault_duration_s,
+        noise_std=spec.noise_std,
+    )
+    return SC.make_scenario(
+        params,
+        duration_s=spec.duration_s,
+        sample_hz=spec.sample_hz,
+        edge_time_s=spec.edge_time_s,
+        noise_seed=noise_seed,
+    )
+
+
 def testbench_trace(spec: TestbenchSpec, key: jax.Array | None = None) -> tuple[jax.Array, float]:
-    """Synthesize the testbench trace.  Returns (trace (T,), dt)."""
+    """Synthesize the testbench trace.  Returns (trace (T,), dt).
+
+    Thin wrapper over ``scenario.render`` (golden-tested against
+    ``testbench_trace_reference``).  Noise from an explicit ``key`` keeps
+    the legacy whole-trace draw for bit-compatibility; chunk-invariant
+    counter-based noise is available via ``scenario_from_testbench(...,
+    noise_seed=...)``.
+    """
+    s = scenario_from_testbench(spec)
+    p, dt = SC.render_trace(s)
+    if key is not None and spec.noise_std > 0:
+        p = p + spec.noise_std * jax.random.normal(key, p.shape)
+        p = jnp.clip(p, 0.0, 1.0)
+    return p.astype(jnp.float32), dt
+
+
+def testbench_trace_reference(
+    spec: TestbenchSpec, key: jax.Array | None = None
+) -> tuple[jax.Array, float]:
+    """The original host-side implementation, kept verbatim as the golden
+    oracle for the scenario-engine equivalence tests."""
     dt = 1.0 / spec.sample_hz
     t = jnp.arange(int(round(spec.duration_s * spec.sample_hz))) * dt
 
@@ -96,16 +148,19 @@ def testbench_trace(spec: TestbenchSpec, key: jax.Array | None = None) -> tuple[
     return p.astype(jnp.float32), dt
 
 
+def choukse_spec() -> TestbenchSpec:
+    return TestbenchSpec(duration_s=240.0, terminate_at_s=210.0)
+
+
 def choukse_testbench(key: jax.Array | None = None) -> tuple[jax.Array, float]:
     """The default trace used throughout the evaluation (paper Fig. 3/9)."""
-    spec = TestbenchSpec(duration_s=240.0, terminate_at_s=210.0)
-    return testbench_trace(spec, key)
+    return testbench_trace(choukse_spec(), key)
 
 
-def titanx_testbench(key: jax.Array | None = None) -> tuple[jax.Array, float]:
+def titanx_spec() -> TestbenchSpec:
     """A 2-GPU Titan-X-style GPT-125M profile (paper §7.1): slower steps,
     checkpoint stalls, normalized to blade TDP."""
-    spec = TestbenchSpec(
+    return TestbenchSpec(
         duration_s=300.0,
         sample_hz=200.0,
         iteration_period_s=1.2,
@@ -119,13 +174,16 @@ def titanx_testbench(key: jax.Array | None = None) -> tuple[jax.Array, float]:
         p_idle=0.06,  # 15 W / 250 W
         terminate_at_s=280.0,
     )
-    return testbench_trace(spec, key)
 
 
-def cluster_fault_trace(key: jax.Array | None = None) -> tuple[jax.Array, float]:
+def titanx_testbench(key: jax.Array | None = None) -> tuple[jax.Array, float]:
+    return testbench_trace(titanx_spec(), key)
+
+
+def cluster_fault_spec() -> TestbenchSpec:
     """Paper Fig. 13: 40 MW cluster (scaled from H100 measurements) with a
     computation fault around t = 400 s causing a near-instant full drop."""
-    spec = TestbenchSpec(
+    return TestbenchSpec(
         duration_s=600.0,
         sample_hz=500.0,
         iteration_period_s=4.0,
@@ -140,7 +198,10 @@ def cluster_fault_trace(key: jax.Array | None = None) -> tuple[jax.Array, float]
         fault_duration_s=25.0,
         terminate_at_s=560.0,
     )
-    return testbench_trace(spec, key)
+
+
+def cluster_fault_trace(key: jax.Array | None = None) -> tuple[jax.Array, float]:
+    return testbench_trace(cluster_fault_spec(), key)
 
 
 def phase_timeline_trace(
@@ -154,8 +215,17 @@ def phase_timeline_trace(
 
     Phase transitions get ``edge_time_s`` linear edges (real rack power
     moves over ~100 ms; the sub-ms content is absorbed by board-level
-    regulation, paper §2.2).
+    regulation, paper §2.2).  Thin wrapper over the scenario engine's
+    segment table (golden-tested against ``phase_timeline_trace_reference``).
     """
+    s = SC.from_phase_timeline(durations_s, powers, sample_hz, edge_time_s=edge_time_s)
+    return SC.render_trace(s)
+
+
+def phase_timeline_trace_reference(
+    durations_s, powers, sample_hz: float, *, edge_time_s: float = 0.1
+) -> tuple[jax.Array, float]:
+    """Original numpy implementation (golden oracle for equivalence tests)."""
     durations = np.asarray(durations_s, np.float64)
     powers_np = np.asarray(powers, np.float32)
     counts = np.maximum(np.round(durations * sample_hz).astype(np.int64), 1)
