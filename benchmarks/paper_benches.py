@@ -19,6 +19,13 @@ from repro.power import scenario as SC, trace
 # durations so the whole harness doubles as a fast smoke run.
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
 
+# Per-bench workload sizes, registered by the bench functions as they run:
+# {bench_name: {"racks": R, "samples": total campus samples}}.  run.py uses
+# these to derive us/rack and samples/s next to the raw wall-clock, so the
+# perf trajectory is readable across PRs without decoding each derived
+# string.
+UNITS: dict[str, dict] = {}
+
 
 def _q(full, quick):
     return quick if QUICK else full
@@ -206,6 +213,7 @@ def bench_fleet_scale():
     f_warm = jax.jit(lambda tr: run(tr, True, 30))
     us_cold, (campus_c, resid_c) = _timeit(f_cold, racks, n=1)
     us_warm, (campus_w, resid_w) = _timeit(f_warm, racks, n=1)
+    UNITS["fleet_1024racks"] = dict(racks=n_racks, samples=t1.shape[0] * n_racks)
     rg = float(compliance.max_abs_ramp(campus_w, dt))
     speedup = us_cold / us_warm
     return "fleet_1024racks", us_warm, (
@@ -228,6 +236,7 @@ def bench_controller_throughput():
     tgt = jnp.asarray(0.5)
     ups = jnp.zeros((n_racks,))
 
+    UNITS["controller_throughput"] = dict(racks=n_racks)
     cold = jax.jit(
         jax.vmap(
             lambda s, u: ctrl.inner_loop_step(
@@ -294,6 +303,7 @@ def bench_fleet_streaming():
     )
     jax.block_until_ready(res.campus_grid)
     us = (_time.perf_counter() - t0) * 1e6
+    UNITS["fleet_streaming_1024racks"] = dict(racks=n_racks, samples=t_total * n_racks)
     rg = float(compliance.max_abs_ramp(res.campus_grid, dt))
     k = int(round(float(cfg.controller.dt) / dt))
     live_mb = 4 * k * 4 * n_racks / 1e6  # chunk_intervals * k samples x R x f32
@@ -334,6 +344,7 @@ def bench_scenario_render():
 
     us_chunk, _ = _timeit(chunked, n=1)
     total = t_total * n_racks
+    UNITS["scenario_render"] = dict(racks=n_racks, samples=total)
     return "scenario_render", us_chunk, (
         f"samples_per_s host={total / (us_full / 1e6):.2e} "
         f"chunked={total / (us_chunk / 1e6):.2e} racks={n_racks} T={t_total}"
@@ -344,8 +355,12 @@ def bench_mixed_campus():
     """The heterogeneous-campus acceptance scenario: 1024 racks running 4
     model-derived workloads + an inference-diurnal block, staggered job
     starts/stops, and a mid-trace fault cascade — conditioned end-to-end by
-    the streaming engine with on-device chunk synthesis (no (T, R) host
-    materialization ever)."""
+    the scanned engine (render + chunk loop fused into ONE dispatch, no
+    (T, R) host materialization ever).  The per-chunk host-loop engine runs
+    once for the derived speedup; in ``--quick`` mode the two are asserted
+    to agree (campus aggregates bitwise where XLA fusion allows, <= a few
+    ulp on the filter chain), so the CI smoke run doubles as an
+    engine-equivalence check."""
     n_racks = _q(1024, 64)
     duration = _q(88.0, 30.0)
     hz = 200.0
@@ -360,19 +375,39 @@ def bench_mixed_campus():
     )
     cfg = pdu.make_pdu(sample_dt=1.0 / hz)
     spec = compliance.GridSpec.create()
-    run = lambda: fleet.condition_scenario_streaming(
-        cfg, s, spec, qp_iters=30, chunk_intervals=4
+    run = lambda engine: fleet.condition_scenario_streaming(
+        cfg, s, spec, engine=engine, qp_iters=30, chunk_intervals=4
     )
-    run()  # compile
+    run("scanned")  # compile
     t0 = time.perf_counter()
-    res = run()
+    res = run("scanned")
     jax.block_until_ready(res.campus_grid)
     us = (time.perf_counter() - t0) * 1e6
+    UNITS["mixed_campus_fleet"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
+
+    host = run("host")  # warm the host-loop engine
+    t0 = time.perf_counter()
+    host = run("host")
+    jax.block_until_ready(host.campus_grid)
+    us_host = (time.perf_counter() - t0) * 1e6
+    if QUICK:
+        np.testing.assert_array_equal(
+            np.asarray(res.campus_rack), np.asarray(host.campus_rack)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.soc_mean), np.asarray(host.soc_mean)
+        )
+        np.testing.assert_allclose(
+            np.asarray(res.campus_grid), np.asarray(host.campus_grid), atol=1e-6
+        )
+
     rg = float(res.report_grid.max_ramp)
     return "mixed_campus_fleet", us, (
         f"racks={n_racks} workloads=5 campus_ramp={rg:.4f}/s "
         f"ok={bool(res.report_grid.ramp_ok)} raw_ok={bool(res.report_rack.ramp_ok)} "
-        f"us_per_rack={us / n_racks:.0f} qp_resid={float(res.max_qp_residual):.2e}"
+        f"us_per_rack={us / n_racks:.0f} qp_resid={float(res.max_qp_residual):.2e} "
+        f"host_loop_us={us_host:.0f} ({us_host / us:.2f}x scanned)"
+        + (" engines_agree=True" if QUICK else "")
     )
 
 

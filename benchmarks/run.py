@@ -39,6 +39,14 @@ def main() -> None:
     sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
     from benchmarks import kernel_benches, paper_benches
 
+    # The tracked trajectory from the previous PR: read it BEFORE the run so
+    # the per-bench delta is printed even when this run overwrites the file.
+    bench_path = os.path.join(_REPO_ROOT, "BENCH_power.json")
+    baseline: dict[str, float] = {}
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            baseline = json.load(f)
+
     print("name,us_per_call,derived")
     failures = 0
     records: dict[str, float] = {}
@@ -52,14 +60,29 @@ def main() -> None:
             print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}")
         sys.stdout.flush()
 
+    # Per-bench delta vs the previous BENCH_power.json + derived metrics
+    # (us/rack, samples/s) for the benches that registered their workload
+    # size in paper_benches.UNITS.  Quick runs shrink the workloads, so
+    # their timings are not comparable to the tracked baseline — skip.
+    if not quick:
+        header = "prev_us,now_us,speedup,us_per_rack,samples_per_s"
+        print(f"\n# perf trajectory vs previous BENCH_power.json\n# name,{header}")
+        for name, us in records.items():
+            prev = baseline.get(name)
+            prev_s = f"{prev:.0f}" if prev else "-"
+            speedup = f"{prev / us:.2f}x" if prev else "-"
+            units = paper_benches.UNITS.get(name, {})
+            upr = f"{us / units['racks']:.0f}" if units.get("racks") else "-"
+            sps = f"{units['samples'] / (us / 1e6):.2e}" if units.get("samples") else "-"
+            print(f"# {name},{prev_s},{us:.0f},{speedup},{upr},{sps}")
+
     if quick:
         print(f"# --quick smoke run: BENCH_power.json not written ({len(records)} benches ran)")
     else:
-        out_path = os.path.join(_REPO_ROOT, "BENCH_power.json")
-        with open(out_path, "w") as f:
+        with open(bench_path, "w") as f:
             json.dump(records, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"# wrote {out_path} ({len(records)} benches)")
+        print(f"# wrote {bench_path} ({len(records)} benches)")
 
     # roofline summary from dry-run records, if present
     recs = sorted(glob.glob("experiments/dryrun/*__16_16.json"))

@@ -90,9 +90,10 @@ def mixed_campus():
     64 racks: three assigned-model training workloads (each rack's
     compute/communicate wave derived from its model's step cost) plus an
     inference block riding a diurnal envelope, staggered job starts, a few
-    early terminations, and a mid-trace fault cascade.  Conditioned through
-    the streaming fleet engine with the scenario as the on-device chunk
-    provider."""
+    early terminations, and a mid-trace fault cascade.  Conditioned by the
+    scanned streaming engine (the default): chunk rendering and the chunk
+    loop are fused into one ``lax.scan``-ned jit, so the whole campus
+    trace is synthesized and conditioned in a single dispatch."""
     hz = 200.0
     archs = ("llama3_2_1b", "deepseek_v3_671b", "whisper_large_v3")
     scen = SC.mixed_campus(

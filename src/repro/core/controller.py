@@ -285,6 +285,9 @@ class ControllerPlan:
     p_mat: jax.Array  # (2h, 2h) quadratic cost
     a_mat: jax.Array  # (3h, 2h) stacked box + SoC constraints
     kkt_chol: jax.Array  # (2h, 2h) lower Cholesky of P + sigma I + rho A'A
+    kkt_inv_sigma: jax.Array  # (2h, 2h) sigma * K^-1 (x-update, x term)
+    kkt_inv_at: jax.Array  # (2h, 3h) K^-1 A' (x-update, rho z - y term)
+    kkt_inv: jax.Array  # (2h, 2h) K^-1 (x-update, hoisted -K^-1 q term)
     q_e0: jax.Array  # (2h,) dq / d e0
     q_du: jax.Array  # (2h,) dq / d u_prev
     lo_base: jax.Array  # (3h,) constraint lower bounds at soc = 0
@@ -343,10 +346,18 @@ def make_plan(
 
     kkt = p_mat + sigma * jnp.eye(2 * h) + rho * (a_mat.T @ a_mat)
     kkt_chol = jnp.linalg.cholesky(kkt)
+    # Explicit K^-1 (tiny, SPD, well-conditioned: P is PSD + sigma I + rho
+    # A'A): the ADMM x-update becomes two small GEMMs instead of a pair of
+    # LAPACK triangular solves per iteration — at fleet scale the (2h, R)
+    # TRSM pair was the single hottest op in the conditioning path.
+    kkt_inv = jax.scipy.linalg.cho_solve((kkt_chol, True), jnp.eye(2 * h))
     return ControllerPlan(
         p_mat=p_mat,
         a_mat=a_mat,
         kkt_chol=kkt_chol,
+        kkt_inv_sigma=sigma * kkt_inv,
+        kkt_inv_at=kkt_inv @ a_mat.T,
+        kkt_inv=kkt_inv,
         q_e0=q_e0,
         q_du=q_du,
         lo_base=lo_base,
@@ -391,14 +402,16 @@ def solve_qp_admm_plan(
 ) -> tuple[QPSolution, QPWarmState]:
     """Batched ADMM against a prefactorized plan.
 
-    The rack batch rides in the trailing axis: each iteration is one
-    ``cho_solve`` with an (2h, R) right-hand side — a pair of triangular
-    solves batched over every rack — instead of R vmapped scalar solves.
-    ``warm`` seeds (x, z, y) from the previous control interval; residuals
-    are returned per rack so callers can verify matched convergence.
+    The rack batch rides in the trailing axis: the x-update
+    ``x = K^-1 (sigma x - q + A'(rho z - y))`` is evaluated against the
+    plan's precomputed ``K^-1`` as two (2h, .) x (., R) GEMMs — with the
+    state-only ``K^-1 q`` term hoisted out of the iteration loop — instead
+    of a per-iteration pair of batched triangular solves (or R vmapped
+    scalar solves).  ``warm`` seeds (x, z, y) from the previous control
+    interval; residuals are returned per rack so callers can verify
+    matched convergence.
     """
-    chol = (plan.kkt_chol, True)
-    rho, sigma = plan.rho, plan.sigma
+    rho = plan.rho
     a_mat = plan.a_mat
     if warm is None:
         x0 = jnp.zeros_like(q)
@@ -406,11 +419,11 @@ def solve_qp_admm_plan(
         y0 = jnp.zeros_like(z0)
     else:
         x0, z0, y0 = warm.x, warm.z, warm.y
+    kq = plan.kkt_inv @ q  # state-only: constant across iterations
 
     def body(carry, _):
         x, z, y = carry
-        rhs = sigma * x - q + a_mat.T @ (rho * z - y)
-        x_new = jax.scipy.linalg.cho_solve(chol, rhs)
+        x_new = plan.kkt_inv_sigma @ x + plan.kkt_inv_at @ (rho * z - y) - kq
         ax = a_mat @ x_new
         z_new = jnp.clip(ax + y / rho, lo, hi)
         y_new = y + rho * (ax - z_new)

@@ -19,6 +19,7 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import compliance, pdu
 
@@ -112,6 +113,119 @@ class StreamingFleetResult(NamedTuple):
     max_qp_residual: jax.Array  # worst per-interval QP primal residual seen
 
 
+class _CampusAccum(NamedTuple):
+    """Preallocated on-device output buffers for the host-loop engine."""
+
+    campus_rack: jax.Array  # (n_chunks * chunk,)
+    campus_grid: jax.Array  # (n_chunks * chunk,)
+    soc_mean: jax.Array  # (n_chunks * chunk_intervals,)
+    worst: jax.Array  # () running max QP primal residual
+
+
+# The streaming engines close their jitted steps over a concrete PDUConfig
+# (pdu.condition bakes config scalars into the kernel via float(...)), so
+# the jit wrapper must be cached *outside* the engine call or every
+# invocation would retrace and recompile from scratch — which is exactly
+# the per-call recompile the pre-scanned benches were paying.  PDUConfig
+# leaves are config scalars, so a value-based key is exact; anything
+# non-scalar falls back to an uncached (per-call) jit.
+_ENGINE_CACHE: dict = {}
+
+
+def _cfg_cache_key(cfg) -> tuple | None:
+    try:
+        leaves, treedef = jax.tree_util.tree_flatten(cfg)
+        return treedef, tuple(np.asarray(leaf).item() for leaf in leaves)
+    except (TypeError, ValueError):  # non-scalar or non-hashable leaf
+        return None
+
+
+def _engine_key(cfg, *rest) -> tuple | None:
+    cfg_key = _cfg_cache_key(cfg)
+    return None if cfg_key is None else (cfg_key,) + rest
+
+
+def _cached_engine(key, build):
+    if key is None:  # un-keyable config: fall back to a per-call jit
+        return build()
+    fn = _ENGINE_CACHE.get(key)
+    if fn is None:
+        fn = _ENGINE_CACHE[key] = build()
+    return fn
+
+
+def make_condition_step(cfg: pdu.PDUConfig, *, qp_iters: int = 30, donate: bool = True):
+    """A cached, jitted ``(state, trace) -> (grid, state, telemetry)`` step.
+
+    The single-chunk building block of the streaming engines, exposed for
+    callers (e.g. ``power.integration.PowerSim``) that condition a stream
+    of same-shaped chunks: the returned function is cached per config, so
+    repeated construction never retraces, and the carried ``PDUState`` is
+    donated between chunks.
+    """
+
+    def build():
+        def step(st, tr):
+            return pdu.condition(cfg, st, tr, qp_iters=qp_iters)
+
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    return _cached_engine(_engine_key(cfg, "condition_step", qp_iters, donate), build)
+
+
+def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis):
+    """Cached jitted host-loop chunk step: condition + accumulate on-device.
+
+    Campus aggregates are written into the preallocated ``_CampusAccum``
+    buffers with ``dynamic_update_slice`` (the chunk index rides in as a
+    traced scalar, so one compilation serves every full chunk; a ragged
+    tail adds one more) and the worst QP residual is folded as a running
+    max — no host-side list appends, ``jnp.concatenate``, or growing lazy
+    ``jnp.maximum`` chains.  Write offsets use the *full* chunk geometry
+    (``chunk`` samples / ``n_int`` intervals), not the possibly-shorter
+    incoming block, so the ragged tail lands at the right position.
+    """
+
+    def build():
+        @functools.partial(jax.jit, donate_argnums=(0, 1))
+        def step(st, acc, tr, c_idx):
+            if mesh is not None:
+                tr = shard_racks_in_jit(tr, mesh, rack_axis)
+            st2, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+            acc2 = _CampusAccum(
+                campus_rack=jax.lax.dynamic_update_slice(
+                    acc.campus_rack, ch.campus_rack, (c_idx * chunk,)
+                ),
+                campus_grid=jax.lax.dynamic_update_slice(
+                    acc.campus_grid, ch.campus_grid, (c_idx * chunk,)
+                ),
+                soc_mean=jax.lax.dynamic_update_slice(
+                    acc.soc_mean, ch.soc_mean, (c_idx * n_int,)
+                ),
+                worst=jnp.maximum(acc.worst, ch.max_qp_residual),
+            )
+            return st2, acc2
+
+        return step
+
+    return _cached_engine(
+        _engine_key(cfg, "host_stream", qp_iters, chunk, n_int, mesh, rack_axis),
+        build,
+    )
+
+
+def _finish_streaming(cfg, grid_spec, state, campus_rack, campus_grid, soc_mean, worst):
+    return StreamingFleetResult(
+        campus_rack=campus_rack,
+        campus_grid=campus_grid,
+        soc_mean=soc_mean,
+        report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
+        report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
+        state=state,
+        max_qp_residual=worst,
+    )
+
+
 def condition_fleet_streaming(
     cfg: pdu.PDUConfig,
     traces: jax.Array | Callable[[int, int], jax.Array],
@@ -123,6 +237,7 @@ def condition_fleet_streaming(
     total_samples: int | None = None,
     mesh: jax.sharding.Mesh | None = None,
     rack_axis: str = "data",
+    state: pdu.PDUState | None = None,
 ) -> StreamingFleetResult:
     """Campus-scale conditioning in time chunks with bounded working set.
 
@@ -130,102 +245,262 @@ def condition_fleet_streaming(
     grid waveform as full (T, R) arrays — 2x the campus trace in HBM, which
     is what caps fleet size for hour-long traces.  This engine walks the
     trace in chunks of ``chunk_intervals`` controller intervals, donates
-    the per-rack ``PDUState`` buffers between chunks, reduces each chunk to
-    campus aggregates inside the jitted step (the per-rack grid waveform
-    never leaves the chunk), and carries the controller's warm-started ADMM
-    state across chunks via ``PDUState.qp_warm`` — so at equal ``qp_iters``
-    the result is identical to the one-shot ``condition_fleet`` call while
-    live memory stays O(chunk * R).  The default ``qp_iters=30`` assumes
-    the warm-started plan path, where 30 iterations match the seed
-    cold-start path's residual at 120 (EXPERIMENTS.md §Perf-4).
+    the per-rack ``PDUState`` and the campus output buffers between chunks,
+    reduces each chunk to campus aggregates inside the jitted step (the
+    per-rack grid waveform never leaves the chunk), and carries the
+    controller's warm-started ADMM state across chunks via
+    ``PDUState.qp_warm`` — so at equal ``qp_iters`` the result is identical
+    to the one-shot ``condition_fleet`` call while live memory stays
+    O(chunk * R).  The default ``qp_iters=30`` assumes the warm-started
+    plan path, where 30 iterations match the seed cold-start path's
+    residual at 120 (EXPERIMENTS.md §Perf-4).
 
     ``traces`` is either a (T, R) array or a chunk provider
-    ``f(start, length) -> (length, R)`` (with ``total_samples`` given), so
-    hour-long campus traces can be synthesized or loaded on the fly without
-    ever materializing (T, R) on the host either.  With ``mesh`` set, each
-    chunk is placed rack-sharded (``shard_racks``) before the step, so the
-    fleet conditions data-parallel across devices.
+    ``f(start, length) -> (length, R)`` (with ``total_samples`` given) for
+    *external* sources — host-loaded or synthesized arrays the engine
+    cannot see inside its jit.  Declarative scenarios should prefer
+    ``condition_scenario_scanned``, which renders chunks inside one scanned
+    jit and dispatches once for the whole trace.  With ``mesh`` set, each
+    chunk is rack-sharded inside the jitted step
+    (``shard_racks_in_jit``); host-resident (non-jax) chunks are placed
+    with ``shard_racks`` first.  Passing ``state`` resumes a previous
+    stream (``soc0`` is then ignored); the stream must resume at a
+    controller-interval boundary, which every full chunk is.  A
+    caller-supplied ``state`` is copied before the (donated) step consumes
+    it, so the same checkpoint can seed several continuations.
     """
     k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
-    chunk = max(int(chunk_intervals), 1) * k
+    n_int = max(int(chunk_intervals), 1)
+    chunk = n_int * k
     if callable(traces):
         if total_samples is None:
             raise ValueError("total_samples is required with a chunk provider")
         provider, t_total = traces, int(total_samples)
     else:
         provider, t_total = (lambda t0, n: traces[t0 : t0 + n]), traces.shape[0]
+    n_chunks = -(-t_total // chunk)
+    n_ctrl = -(-t_total // k)
 
-    state = pdu.init_state(cfg, provider(0, 1)[0], soc0=soc0)
+    if state is None:
+        state = pdu.init_state(cfg, provider(0, 1)[0], soc0=soc0)
+    else:
+        # The step donates its state argument; copy so the caller's
+        # checkpoint survives (and can seed several continuations).
+        state = jax.tree_util.tree_map(jnp.copy, state)
 
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def step(st, tr):
-        grid, st2, telem = pdu.condition(cfg, st, tr, qp_iters=qp_iters)
-        return (
-            st2,
-            jnp.mean(tr, axis=1),
-            jnp.mean(grid, axis=1),
-            jnp.mean(telem.soc, axis=1),
-            jnp.max(telem.qp_residual),
-        )
-
-    campus_rack, campus_grid, soc_mean = [], [], []
-    worst = jnp.asarray(0.0, jnp.float32)
-    for t0 in range(0, t_total, chunk):
-        n_real = min(chunk, t_total - t0)
-        tr = provider(t0, n_real)
-        if n_real < chunk:
-            # ZOH-pad the trailing partial chunk to the full chunk shape so
-            # `step` compiles exactly once; the pad is sliced off the campus
-            # aggregates below.  (pdu.condition already ZOH-pads ragged
-            # trailing controller intervals internally, so the carried state
-            # sees the same hold — just for the remaining pad intervals too.)
-            tr = jnp.concatenate(
-                [tr, jnp.repeat(tr[-1:], chunk - n_real, axis=0)], axis=0
-            )
-        if mesh is not None:
-            tr = shard_racks(tr, mesh, rack_axis)
-        state, cr, cg, sm, resid = step(state, tr)
-        campus_rack.append(cr[:n_real])
-        campus_grid.append(cg[:n_real])
-        soc_mean.append(sm[: -(-n_real // k)])
-        worst = jnp.maximum(worst, resid)
-
-    campus_rack = jnp.concatenate(campus_rack)
-    campus_grid = jnp.concatenate(campus_grid)
-    return StreamingFleetResult(
-        campus_rack=campus_rack,
-        campus_grid=campus_grid,
-        soc_mean=jnp.concatenate(soc_mean),
-        report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
-        report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
-        state=state,
-        max_qp_residual=worst,
+    step = _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis)
+    acc = _CampusAccum(
+        campus_rack=jnp.zeros((n_chunks * chunk,), jnp.float32),
+        campus_grid=jnp.zeros((n_chunks * chunk,), jnp.float32),
+        soc_mean=jnp.zeros((n_chunks * n_int,), jnp.float32),
+        worst=jnp.zeros((), jnp.float32),
     )
+    for c_idx, t0 in enumerate(range(0, t_total, chunk)):
+        # The trailing partial chunk runs at its natural length (one extra
+        # `step` compilation): `pdu.condition` ZOH-pads its trailing
+        # partial controller interval internally, exactly as a one-shot
+        # whole-trace call would, so the carried state / soc_mean /
+        # max_qp_residual never see whole pad intervals and stay
+        # chunk-size invariant (and scanned-engine identical).
+        tr = provider(t0, min(chunk, t_total - t0))
+        if mesh is not None and not isinstance(tr, jax.Array):
+            tr = shard_racks(tr, mesh, rack_axis)  # host-resident input
+        state, acc = step(state, acc, tr, jnp.asarray(c_idx, jnp.int32))
+
+    return _finish_streaming(
+        cfg, grid_spec, state,
+        acc.campus_rack[:t_total], acc.campus_grid[:t_total],
+        acc.soc_mean[:n_ctrl], acc.worst,
+    )
+
+
+def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis):
+    """Cached jitted scanned engine: the whole trace in ONE dispatch.
+
+    ``jax.lax.scan`` walks the chunk index over the ``n_full`` full chunks;
+    each iteration renders its (chunk, R) block on-device
+    (``scenario.render`` with the traced chunk counter), optionally
+    constrains the rack sharding in-jit, runs ``pdu.condition_campus``,
+    and writes the campus aggregates into the scan's preallocated stacked
+    outputs.  A ``rem``-sample ragged tail is conditioned by an epilogue
+    step in the same jit at its *natural* length (static start index and
+    shape; ``pdu.condition`` ZOH-pads the trailing partial controller
+    interval internally, exactly as a one-shot whole-trace call would) —
+    so the returned state, ``soc_mean``, and ``max_qp_residual`` never see
+    pad intervals and are chunk-size invariant.  The scenario and the
+    start sample ride in as traced arguments, so one compilation serves
+    every scenario with the same structure and rack count — and every
+    resume point with the same remaining chunk geometry (e.g. fixed-size
+    windows of a long stream).
+    """
+    from repro.power import scenario as SC
+
+    def prep(tr):
+        if tr.ndim == 1:  # unbatched scenario: lift to a 1-rack fleet
+            tr = tr[:, None]
+        if mesh is not None:
+            tr = shard_racks_in_jit(tr, mesh, rack_axis)
+        return tr
+
+    def build():
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def run(scen, st, start):
+            def body(carry, c_idx):
+                tr = prep(SC.render(scen, start + c_idx * chunk, chunk))
+                return pdu.condition_campus(cfg, carry, tr, qp_iters=qp_iters)
+
+            parts = []
+            worst = []
+            if n_full:
+                st, ch = jax.lax.scan(
+                    body, st, jnp.arange(n_full, dtype=jnp.int32)
+                )
+                parts.append(pdu.CampusChunk(
+                    ch.campus_rack.reshape(-1), ch.campus_grid.reshape(-1),
+                    ch.soc_mean.reshape(-1), None,
+                ))
+                worst.append(jnp.max(ch.max_qp_residual))
+            if rem:
+                tr = prep(SC.render(scen, start + n_full * chunk, rem))
+                st, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+                parts.append(ch)
+                worst.append(ch.max_qp_residual)
+            cat = lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs)
+            return st, pdu.CampusChunk(
+                campus_rack=cat([p.campus_rack for p in parts]),
+                campus_grid=cat([p.campus_grid for p in parts]),
+                soc_mean=cat([p.soc_mean for p in parts]),
+                max_qp_residual=functools.reduce(jnp.maximum, worst),
+            )
+
+        return run
+
+    return _cached_engine(
+        _engine_key(cfg, "scanned", qp_iters, chunk, n_full, rem,
+                    mesh, rack_axis),
+        build,
+    )
+
+
+def condition_scenario_scanned(
+    cfg: pdu.PDUConfig,
+    scenario,
+    grid_spec: compliance.GridSpec,
+    *,
+    soc0: float = 0.5,
+    qp_iters: int = 30,
+    chunk_intervals: int = 16,
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+    state: pdu.PDUState | None = None,
+    start_sample: int = 0,
+    stop_sample: int | None = None,
+) -> StreamingFleetResult:
+    """Device-resident streaming: render + condition in one scanned jit.
+
+    The host-loop engine pays per-chunk Python dispatch, a separately
+    jitted scenario render, and host-side accumulation.  Because
+    ``scenario.render(s, t0, n)`` is pure in the absolute sample index, the
+    render can move *inside* the step: a single ``jax.lax.scan`` over chunk
+    indices synthesizes each (chunk, R) block on-device, conditions it, and
+    stacks the campus aggregates into preallocated scan outputs — one
+    dispatch for the whole trace, zero host<->device ping-pong, donated
+    ``PDUState``, and rack sharding expressed as a
+    ``with_sharding_constraint`` inside the jit.  ``qp_iters`` / warm-start
+    semantics are bit-identical to the host-loop engine and to one-shot
+    ``condition_fleet`` at equal ``qp_iters``.
+
+    ``state`` + ``start_sample`` / ``stop_sample`` window the stream: pass
+    a previous call's returned state and the absolute sample index to
+    resume at (a multiple of the controller interval — any multiple of the
+    chunk size qualifies); aggregates cover ``[start_sample, stop_sample)``
+    of the *unmodified* scenario, so a split-and-resume run reproduces the
+    one-call run (truncating ``total_samples`` instead would change the
+    edge-smoothing windows near the cut).  A caller-supplied ``state`` is
+    copied before the (donated) engine consumes it, so the same checkpoint
+    can seed several continuations.
+    """
+    from repro.power import scenario as SC
+
+    _check_scenario_rate(scenario, cfg)
+    k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
+    chunk = max(int(chunk_intervals), 1) * k
+    start = int(start_sample)
+    stop = scenario.total_samples if stop_sample is None else int(stop_sample)
+    if not 0 <= stop <= scenario.total_samples:
+        raise ValueError(
+            f"stop_sample {stop} outside the scenario "
+            f"({scenario.total_samples} samples)"
+        )
+    if start < 0 or start % k:
+        raise ValueError(
+            f"start_sample {start} must be a non-negative multiple of the "
+            f"controller interval ({k} samples) so the resumed state stays "
+            "interval-aligned"
+        )
+    t_total = stop - start
+    if t_total <= 0:
+        raise ValueError(
+            f"start_sample {start} is past the scenario end "
+            f"(stop at {stop} samples)"
+        )
+    n_full, rem = divmod(t_total, chunk)
+    n_ctrl = -(-t_total // k)
+
+    if state is None:
+        r0 = SC.render(scenario, start, 1)[0]
+        if r0.ndim == 0:
+            r0 = r0[None]  # unbatched scenario: the engine lifts to 1 rack
+        state = pdu.init_state(cfg, r0, soc0=soc0)
+    else:
+        # The engine donates its state argument; copy so the caller's
+        # checkpoint survives (and can seed several continuations).
+        state = jax.tree_util.tree_map(jnp.copy, state)
+
+    run = _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis)
+    state_f, ch = run(scenario, state, jnp.asarray(start, jnp.int32))
+    return _finish_streaming(
+        cfg, grid_spec, state_f,
+        ch.campus_rack[:t_total], ch.campus_grid[:t_total],
+        ch.soc_mean[:n_ctrl], ch.max_qp_residual,
+    )
+
+
+def _check_scenario_rate(scenario, cfg: pdu.PDUConfig) -> None:
+    if abs(1.0 / scenario.sample_hz - cfg.sample_dt) > 1e-9:
+        raise ValueError(
+            f"scenario sample rate {scenario.sample_hz} Hz != PDU sample_dt "
+            f"{cfg.sample_dt} s; build the PDU with sample_dt=1/sample_hz"
+        )
 
 
 def condition_scenario_streaming(
     cfg: pdu.PDUConfig,
     scenario,
     grid_spec: compliance.GridSpec,
+    *,
+    engine: str = "scanned",
     **kwargs,
 ) -> StreamingFleetResult:
     """Condition a declarative ``repro.power.scenario.Scenario`` fleet.
 
-    The scenario's ``render(s, t0, n)`` is the chunk provider: each (n, R)
-    chunk is synthesized on-device and conditioned in place, so campus-scale
-    heterogeneous fleets (per-rack model workloads, staggered starts, fault
-    cascades, diurnal inference blocks) stream end-to-end without a (T, R)
-    host materialization.  This is the scenario-native successor to
-    ``staggered_fleet`` + ``apply_failures``, which express offsets/failures
-    by materializing and mutating whole trace arrays.
+    Chunks are synthesized on-device and conditioned in place, so
+    campus-scale heterogeneous fleets (per-rack model workloads, staggered
+    starts, fault cascades, diurnal inference blocks) stream end-to-end
+    without a (T, R) host materialization.  ``engine="scanned"`` (default)
+    fuses rendering and the chunk loop into one scanned jit
+    (``condition_scenario_scanned``); ``engine="host"`` keeps the per-chunk
+    host loop (``condition_fleet_streaming`` with the scenario's chunk
+    provider) — the two are bit-identical, the host loop is just the slow
+    oracle for equivalence tests.
     """
     from repro.power import scenario as SC
 
-    if abs(1.0 / scenario.sample_hz - cfg.sample_dt) > 1e-9:
-        raise ValueError(
-            f"scenario sample rate {scenario.sample_hz} Hz != PDU sample_dt "
-            f"{cfg.sample_dt} s; build the PDU with sample_dt=1/sample_hz"
-        )
+    if engine == "scanned":
+        return condition_scenario_scanned(cfg, scenario, grid_spec, **kwargs)
+    if engine != "host":
+        raise ValueError(f"unknown engine {engine!r} (expected 'scanned' or 'host')")
+    _check_scenario_rate(scenario, cfg)
     return condition_fleet_streaming(
         cfg,
         SC.chunk_provider(scenario),
@@ -236,7 +511,21 @@ def condition_scenario_streaming(
 
 
 def shard_racks(traces: jax.Array, mesh: jax.sharding.Mesh, axis: str = "data") -> jax.Array:
-    """Place the rack axis of a (T, R) trace array across a mesh axis so
-    fleet conditioning runs data-parallel across devices."""
+    """Place the rack axis of a host-resident (T, R) trace array across a
+    mesh axis (``device_put``) so fleet conditioning runs data-parallel
+    across devices.  Inside a jit, use ``shard_racks_in_jit`` instead —
+    arrays already on device never need the host staging this call forces."""
     spec = jax.sharding.PartitionSpec(None, axis)
     return jax.device_put(traces, jax.sharding.NamedSharding(mesh, spec))
+
+
+def shard_racks_in_jit(
+    traces: jax.Array, mesh: jax.sharding.Mesh, axis: str = "data"
+) -> jax.Array:
+    """In-jit variant of ``shard_racks``: expresses the rack sharding as a
+    ``with_sharding_constraint`` against an explicit mesh, so streamed
+    chunks (rendered or passed as jit arguments) are partitioned by GSPMD
+    without a per-chunk host ``device_put`` round-trip."""
+    from repro.sharding import rules
+
+    return rules.constrain_to_mesh(traces, mesh, None, axis)

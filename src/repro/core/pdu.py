@@ -273,6 +273,41 @@ def condition(
     )
 
 
+class CampusChunk(NamedTuple):
+    """Campus aggregates of one conditioned (T, R) chunk (per-unit means)."""
+
+    campus_rack: jax.Array  # (T,) mean unconditioned campus load
+    campus_grid: jax.Array  # (T,) mean conditioned campus load
+    soc_mean: jax.Array  # (n_ctrl,) fleet-mean SoC per control interval
+    max_qp_residual: jax.Array  # () worst QP primal residual in the chunk
+
+
+def condition_campus(
+    cfg: PDUConfig,
+    state: PDUState,
+    rack_power: jax.Array,  # (T, R) per-unit rack traces
+    *,
+    qp_iters: int = 30,
+    use_plan: bool = True,
+) -> tuple[PDUState, CampusChunk]:
+    """One streaming-campus step: condition a chunk, reduce to aggregates.
+
+    The per-rack grid waveform is reduced to campus means *inside* the same
+    computation (XLA fuses the reduction into the conditioning scan), so a
+    streaming engine that only needs campus-level compliance never
+    materializes the conditioned (T, R) block outside the step.  Shared by
+    the host-loop and scanned fleet engines so their per-chunk arithmetic
+    is identical by construction.
+    """
+    grid, state2, telem = condition(cfg, state, rack_power, qp_iters=qp_iters, use_plan=use_plan)
+    return state2, CampusChunk(
+        campus_rack=jnp.mean(rack_power, axis=1),
+        campus_grid=jnp.mean(grid, axis=1),
+        soc_mean=jnp.mean(telem.soc, axis=1),
+        max_qp_residual=jnp.max(telem.qp_residual),
+    )
+
+
 def combined_transfer_function(cfg: PDUConfig, f_hz: jax.Array) -> jax.Array:
     """|H_total| = |H_ESS| * |H_LC| (paper Fig. 7)."""
     return ess.transfer_function(cfg.ess_params, f_hz) * filters.transfer_function_rack_to_grid(

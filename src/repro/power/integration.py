@@ -18,7 +18,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, pdu
+from repro.core import compliance, fleet, pdu
 from repro.power import phases as P
 from repro.power import scenario as SC
 from repro.power.device import DevicePower
@@ -61,17 +61,25 @@ class PowerSim:
         self._k = max(
             int(round(float(self.pdu_cfg.controller.dt) * self.cfg.sample_hz)), 1
         )
-        self._pending = np.zeros((0,), np.float32)
+        self._pending = jnp.zeros((0,), jnp.float32)
+        # The fleet engines' cached single-chunk step: jitted once per
+        # config (not per PowerSim instance, not per call) with the carried
+        # PDUState donated — the seed path re-traced an un-jitted
+        # pdu.condition on every training step.
+        self._step = fleet.make_condition_step(self.pdu_cfg, qp_iters=25)
 
-    def _condition(self, chunk: np.ndarray, dt: float) -> None:
-        self._pending = np.concatenate([self._pending, chunk])
-        n = (len(self._pending) // self._k) * self._k
+    def _condition(self, chunk: jnp.ndarray, dt: float) -> None:
+        # Device-resident buffering: rendered step chunks stay on device
+        # through concatenation, conditioning, and slicing; the only
+        # host transfers are the np.asarray bookkeeping copies for report().
+        self._pending = jnp.concatenate([self._pending, chunk])
+        n = (self._pending.shape[0] // self._k) * self._k
         if n == 0:
             return
-        trace, self._pending = jnp.asarray(self._pending[:n]), self._pending[n:]
+        trace, self._pending = self._pending[:n], self._pending[n:]
         if self.state is None:
             self.state = pdu.init_state(self.pdu_cfg, trace[0])
-        grid, self.state, telem = pdu.condition(self.pdu_cfg, self.state, trace, qp_iters=25)
+        grid, self.state, telem = self._step(self.state, trace)
         self.soc = float(np.asarray(telem.soc)[-1])
         self.max_ramp_seen = max(
             self.max_ramp_seen, float(compliance.max_abs_ramp(grid, dt))
@@ -89,7 +97,7 @@ class PowerSim:
         # chunk on-device (steps share a shape, so `render` stays cached).
         s = SC.from_phase_timeline(durs, pows, self.cfg.sample_hz)
         chunk, dt = SC.render_trace(s)
-        self._condition(np.asarray(chunk, np.float32), dt)
+        self._condition(chunk, dt)
 
     def report(self) -> dict:
         rack = np.concatenate(self.rack_trace_chunks) if self.rack_trace_chunks else np.zeros(1)

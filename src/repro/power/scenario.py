@@ -321,6 +321,48 @@ serves directly as a streaming chunk provider (``chunk_provider``).
 """
 
 
+def _render_padded_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
+    tr = _render_impl(s, t0, n)
+    t0 = jnp.asarray(t0, jnp.int32)
+    idx = t0 + jnp.arange(n, dtype=jnp.int32)
+    # Position of the last in-range sample within this chunk; holding it for
+    # every out-of-range row reproduces exactly the ZOH pad the host-loop
+    # engine applies to a ragged trailing chunk (repeat of tr[-1:]).
+    last = jnp.clip(jnp.int32(s.total_samples - 1) - t0, 0, n - 1)
+    hold = jax.lax.dynamic_index_in_dim(tr, last, axis=0, keepdims=True)
+    valid = idx < s.total_samples
+    return jnp.where(valid if tr.ndim == 1 else valid[:, None], tr, hold)
+
+
+render_padded = jax.jit(_render_padded_impl, static_argnames="n")
+render_padded.__doc__ = """``render`` with ZOH padding past the scenario end.
+
+Samples at absolute indices ``>= total_samples`` hold the chunk's last
+in-range sample, so every chunk of a fixed-shape chunk walk
+(``chunk_count`` chunks of ``n`` samples) renders with one static shape —
+including the ragged final chunk.  ``t0`` may be a traced value (e.g. a
+``lax.scan`` chunk counter); in-range samples are bit-identical to
+``render`` at the same indices.  Requires ``t0 < total_samples`` (at
+least one in-range sample per chunk) — the walk ``chunk_count``
+prescribes never violates this.
+
+This is the entry point for *external* fixed-shape pipelines (e.g. a
+pre-sized ring buffer).  The scanned fleet engine itself conditions the
+ragged tail at its natural length instead (``pdu.condition`` pads the
+trailing partial controller interval internally), so its state and
+aggregates never see whole pad intervals.
+"""
+
+
+def chunk_count(s: Scenario, chunk_samples: int) -> int:
+    """Static number of ``chunk_samples``-sample chunks covering the
+    scenario — the fixed walk length for ``render_padded`` pipelines or a
+    ``lax.scan`` over same-shaped chunks."""
+    if chunk_samples <= 0:
+        raise ValueError(f"chunk_samples must be positive, got {chunk_samples}")
+    return -(-s.total_samples // int(chunk_samples))
+
+
 def render_trace(s: Scenario) -> tuple[jax.Array, float]:
     """Render the whole scenario; returns ``(trace, dt)`` like the legacy API."""
     return render(s, 0, s.total_samples), s.dt

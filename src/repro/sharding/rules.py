@@ -191,23 +191,8 @@ def shardings(shapes: Any, mesh: Mesh, **kw) -> Any:
 # ------------------------------------------------------------ activations --
 
 
-def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
-    """``with_sharding_constraint`` that is a no-op without a mesh context.
-
-    Model code calls this at activation boundaries — without it GSPMD can
-    "win" by keeping the d_model contraction sharded and the BATCH
-    replicated (observed: 16x activation blow-up through attention), and
-    the (B, T, V) fp32 logits must shard over vocab on "model" or the loss
-    alone is tens of GB per device at the assigned shapes.  Axis names
-    absent from the ambient mesh and axes that do not divide their dim are
-    dropped, so smoke tests (no mesh), debug meshes, and batch-1 long-
-    context shapes run unchanged.
-    """
-    from jax._src import mesh as mesh_lib
-
-    m = mesh_lib.thread_resources.env.physical_mesh
-    if m.empty or m.size == 1:
-        return x
+def _clean_spec(m: Mesh, spec: tuple, shape: tuple[int, ...]) -> P:
+    """Drop spec axes absent from ``m`` or not dividing their dim."""
     names = set(m.axis_names)
 
     def keep(s, dim):
@@ -225,9 +210,45 @@ def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
             return None
         return s if dim % m.shape[s] == 0 else None
 
-    spec = spec + (None,) * (x.ndim - len(spec))
-    cleaned = P(*(keep(s, d) for s, d in zip(spec, x.shape)))
+    spec = spec + (None,) * (len(shape) - len(spec))
+    return P(*(keep(s, d) for s, d in zip(spec, shape)))
+
+
+def maybe_constrain(x: jax.Array, *spec) -> jax.Array:
+    """``with_sharding_constraint`` that is a no-op without a mesh context.
+
+    Model code calls this at activation boundaries — without it GSPMD can
+    "win" by keeping the d_model contraction sharded and the BATCH
+    replicated (observed: 16x activation blow-up through attention), and
+    the (B, T, V) fp32 logits must shard over vocab on "model" or the loss
+    alone is tens of GB per device at the assigned shapes.  Axis names
+    absent from the ambient mesh and axes that do not divide their dim are
+    dropped, so smoke tests (no mesh), debug meshes, and batch-1 long-
+    context shapes run unchanged.
+    """
+    from jax._src import mesh as mesh_lib
+
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty or m.size == 1:
+        return x
+    cleaned = _clean_spec(m, spec, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(m, cleaned))
+
+
+def constrain_to_mesh(x: jax.Array, mesh: Mesh, *spec) -> jax.Array:
+    """``with_sharding_constraint`` against an *explicit* mesh.
+
+    Unlike ``maybe_constrain`` this needs no ambient mesh context, so it
+    works inside any jit given a mesh object — the fleet engines use it to
+    express rack sharding of streamed chunks *inside* the step instead of
+    staging every chunk through a host-side ``device_put``.  The same
+    guards apply: a single-device mesh is a no-op, and axes that are
+    missing or do not divide their dim are dropped.
+    """
+    if mesh.empty or mesh.size == 1:
+        return x
+    cleaned = _clean_spec(mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, cleaned))
 
 
 def constrain_activations(x: jax.Array) -> jax.Array:

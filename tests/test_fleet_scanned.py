@@ -1,0 +1,281 @@
+"""Engine-equivalence tests: scanned vs host-loop vs one-shot (ISSUE 4).
+
+The scanned engine (`fleet.condition_scenario_scanned`) fuses on-device
+chunk rendering and the chunk loop into one `lax.scan`-ned jit; the
+host-loop engine walks the same chunks from Python; `condition_fleet` is
+the one-shot whole-trace oracle.  All three share `pdu.condition_campus`,
+so their per-chunk arithmetic is identical by construction.
+
+Tolerance contract: XLA CPU contracts mul+add chains into FMAs differently
+depending on the fusion context, so quantities that pass through the LC
+filter recurrence (`campus_grid`, filter / warm-QP state) may differ by a
+few ulps between the engines' separately compiled programs.  Aggregates
+that do not touch the filter chain (`campus_rack`, `soc_mean`) must match
+bit-for-bit, and everything else must agree to ~1e-6 absolute.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance, fleet, pdu
+from repro.power import scenario as SC
+
+_ULP = 1e-6  # few-ulp FMA-contraction slack for filter-chain outputs
+_SPEC = compliance.GridSpec.create()
+_HZ = 200.0
+
+
+def _campus(n_racks=6, duration_s=44.0, seed=2, noise_seed=7):
+    return SC.mixed_campus(
+        n_racks,
+        ("llama3_2_1b", "whisper_large_v3"),
+        duration_s=duration_s,
+        sample_hz=_HZ,
+        seed=seed,
+        fault_at_s=duration_s * 0.6,
+        noise_seed=noise_seed,
+    )
+
+
+def _cfg():
+    return pdu.make_pdu(sample_dt=1.0 / _HZ)
+
+
+def _assert_results_match(a, b, *, grid_atol=_ULP):
+    np.testing.assert_array_equal(np.asarray(a.campus_rack), np.asarray(b.campus_rack))
+    np.testing.assert_array_equal(np.asarray(a.soc_mean), np.asarray(b.soc_mean))
+    np.testing.assert_allclose(
+        np.asarray(a.campus_grid), np.asarray(b.campus_grid), atol=grid_atol
+    )
+    np.testing.assert_allclose(
+        np.asarray(a.max_qp_residual), np.asarray(b.max_qp_residual), atol=grid_atol
+    )
+
+
+def _assert_states_match(sa, sb, *, atol=_ULP):
+    for la, lb in zip(jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=atol)
+
+
+def test_scanned_matches_host_loop():
+    """Same scenario, same chunking: the one-dispatch scanned engine must
+    reproduce the per-chunk host loop — including the final PDUState, so
+    either engine's stream can be resumed by the other."""
+    s = _campus()
+    cfg = _cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=20, chunk_intervals=2)
+    b = fleet.condition_scenario_streaming(
+        cfg, s, _SPEC, engine="host", qp_iters=20, chunk_intervals=2
+    )
+    assert a.campus_grid.shape == (s.total_samples,)
+    _assert_results_match(a, b)
+    _assert_states_match(a.state, b.state)
+    assert bool(a.report_grid.ramp_ok)
+
+
+@pytest.mark.slow
+def test_scanned_matches_one_shot_condition_fleet():
+    """Chunked-with-carried-warm-state == one whole-trace call at equal
+    qp_iters (the PR-1 streaming contract, now via the scanned engine)."""
+    s = _campus()
+    cfg = _cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=20, chunk_intervals=2)
+    full = SC.render(s, 0, s.total_samples)
+    res = fleet.condition_fleet(cfg, full, _SPEC, qp_iters=20)
+    np.testing.assert_array_equal(np.asarray(a.campus_rack), np.asarray(res.campus_rack))
+    np.testing.assert_allclose(
+        np.asarray(a.campus_grid), np.asarray(res.campus_grid), atol=1e-5
+    )
+    # and the states match the one-shot pdu-level call
+    st0 = pdu.init_state(cfg, full[0])
+    _, st_f, _ = pdu.condition(cfg, st0, full, qp_iters=20)
+    _assert_states_match(a.state, st_f, atol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("duration_s", [32.5, 37.3])
+def test_scanned_ragged_final_chunk(duration_s):
+    """The epilogue step's static-index ZOH pad must reproduce the host
+    loop's explicit pad — including a tail shorter than one controller
+    interval (32.5 s: 500-sample tail against k = 1000)."""
+    s = _campus(n_racks=4, duration_s=duration_s)
+    cfg = _cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=2)
+    b = fleet.condition_scenario_streaming(
+        cfg, s, _SPEC, engine="host", qp_iters=15, chunk_intervals=2
+    )
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    assert a.campus_grid.shape == (s.total_samples,)
+    assert a.soc_mean.shape == (-(-s.total_samples // k),)
+    _assert_results_match(a, b)
+    _assert_states_match(a.state, b.state)
+
+
+@pytest.mark.slow
+def test_scanned_chunk_intervals_invariance():
+    """The warm ADMM state rides in PDUState across chunk boundaries, so
+    the chunk size must not change the result."""
+    s = _campus(n_racks=4)
+    cfg = _cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=2)
+    b = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=4)
+    _assert_results_match(a, b)
+    _assert_states_match(a.state, b.state)
+
+
+def test_scanned_resume_from_returned_state():
+    """Splitting a scenario at a chunk boundary and resuming from the
+    returned state must reproduce the unsplit run."""
+    s = _campus(n_racks=4)
+    cfg = _cfg()
+    full = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=2)
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    t_cut = 2 * 2 * k  # two chunks
+    first = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=15, chunk_intervals=2, stop_sample=t_cut
+    )
+    rest = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=15, chunk_intervals=2,
+        state=first.state, start_sample=t_cut,
+    )
+    assert rest.campus_grid.shape == (s.total_samples - t_cut,)
+    glued = np.concatenate([np.asarray(first.campus_rack), np.asarray(rest.campus_rack)])
+    np.testing.assert_array_equal(glued, np.asarray(full.campus_rack))
+    glued = np.concatenate([np.asarray(first.campus_grid), np.asarray(rest.campus_grid)])
+    np.testing.assert_allclose(glued, np.asarray(full.campus_grid), atol=_ULP)
+    glued = np.concatenate([np.asarray(first.soc_mean), np.asarray(rest.soc_mean)])
+    np.testing.assert_allclose(glued, np.asarray(full.soc_mean), atol=_ULP)
+    _assert_states_match(rest.state, full.state)
+
+
+def test_scanned_resume_past_end_raises():
+    s = _campus(n_racks=2, duration_s=20.0)
+    with pytest.raises(ValueError, match="past the scenario end"):
+        fleet.condition_scenario_scanned(
+            _cfg(), s, _SPEC, start_sample=s.total_samples
+        )
+
+
+def test_scanned_start_sample_must_be_interval_aligned():
+    s = _campus(n_racks=2, duration_s=20.0)
+    cfg = _cfg()
+    for bad in (-1000, 137):  # negative, and not a multiple of k=1000
+        with pytest.raises(ValueError, match="multiple of the controller interval"):
+            fleet.condition_scenario_scanned(cfg, s, _SPEC, start_sample=bad)
+
+
+def test_resume_state_is_not_consumed():
+    """The engines donate their state argument internally, but a caller's
+    checkpoint must survive to seed several continuations."""
+    s = _campus(n_racks=2, duration_s=30.0)
+    cfg = _cfg()
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    first = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=10, chunk_intervals=2, stop_sample=2 * k
+    )
+    a = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=10, chunk_intervals=2,
+        state=first.state, start_sample=2 * k,
+    )
+    b = fleet.condition_scenario_scanned(  # same checkpoint, second use
+        cfg, s, _SPEC, qp_iters=10, chunk_intervals=2,
+        state=first.state, start_sample=2 * k,
+    )
+    np.testing.assert_array_equal(np.asarray(a.campus_grid), np.asarray(b.campus_grid))
+    # host-loop path: same contract
+    tr = SC.render(s, 0, s.total_samples)
+    h1 = fleet.condition_fleet_streaming(cfg, tr[: 2 * k], _SPEC, qp_iters=10)
+    h2 = fleet.condition_fleet_streaming(cfg, tr[2 * k :], _SPEC, qp_iters=10, state=h1.state)
+    h3 = fleet.condition_fleet_streaming(cfg, tr[2 * k :], _SPEC, qp_iters=10, state=h1.state)
+    np.testing.assert_array_equal(np.asarray(h2.campus_grid), np.asarray(h3.campus_grid))
+
+
+def test_scanned_unbatched_scenario_lifts_to_one_rack():
+    s = SC.scenario_from_model("llama3_2_1b", duration_s=20.0, sample_hz=_HZ)
+    res = fleet.condition_scenario_scanned(_cfg(), s, _SPEC, qp_iters=10)
+    assert res.campus_grid.shape == (s.total_samples,)
+    assert np.all(np.isfinite(np.asarray(res.campus_grid)))
+
+
+def test_condition_scenario_streaming_rejects_unknown_engine():
+    s = _campus(n_racks=2, duration_s=20.0)
+    with pytest.raises(ValueError, match="unknown engine"):
+        fleet.condition_scenario_streaming(_cfg(), s, _SPEC, engine="warp")
+
+
+def test_condition_campus_is_the_reduced_condition():
+    """pdu.condition_campus == pdu.condition + campus reductions."""
+    cfg = _cfg()
+    key = jax.random.key(0)
+    tr = 0.5 + 0.3 * jax.random.uniform(key, (2400, 3))
+    st = pdu.init_state(cfg, tr[0])
+    st_a, ch = pdu.condition_campus(cfg, st, tr, qp_iters=10)
+    st_b = pdu.init_state(cfg, tr[0])
+    grid, st_b, telem = pdu.condition(cfg, st_b, tr, qp_iters=10)
+    np.testing.assert_array_equal(np.asarray(ch.campus_rack), np.asarray(jnp.mean(tr, axis=1)))
+    np.testing.assert_allclose(
+        np.asarray(ch.campus_grid), np.asarray(jnp.mean(grid, axis=1)), atol=_ULP
+    )
+    np.testing.assert_allclose(
+        np.asarray(ch.soc_mean), np.asarray(jnp.mean(telem.soc, axis=1)), atol=_ULP
+    )
+    assert ch.max_qp_residual.shape == ()
+
+
+def test_render_padded_holds_final_sample():
+    """In-range samples bit-match `render`; past-the-end rows hold the last
+    in-range sample (the streaming engines' ZOH pad)."""
+    s = _campus(n_racks=3, duration_s=10.0)
+    t = s.total_samples
+    chunk = 512
+    t0 = t - 100  # 100 real samples, 412 pad rows
+    padded = SC.render_padded(s, t0, chunk)
+    plain = SC.render(s, t0, 100)
+    np.testing.assert_array_equal(np.asarray(padded[:100]), np.asarray(plain))
+    np.testing.assert_array_equal(
+        np.asarray(padded[100:]),
+        np.broadcast_to(np.asarray(plain[-1:]), (chunk - 100,) + plain.shape[1:]),
+    )
+    # traced t0 (the in-scan case) agrees with the static call (up to
+    # FMA-contraction ulps: the wrapping jit compiles a different fusion)
+    traced = jax.jit(lambda i: SC.render_padded(s, i, chunk))(jnp.int32(t0))
+    np.testing.assert_allclose(np.asarray(traced), np.asarray(padded), atol=1e-7)
+
+
+def test_chunk_count():
+    s = _campus(n_racks=2, duration_s=10.0)  # 2000 samples
+    assert SC.chunk_count(s, 500) == 4
+    assert SC.chunk_count(s, 600) == 4
+    assert SC.chunk_count(s, 2000) == 1
+    with pytest.raises(ValueError):
+        SC.chunk_count(s, 0)
+
+
+def test_make_condition_step_is_cached_per_config():
+    cfg = _cfg()
+    a = fleet.make_condition_step(cfg, qp_iters=25)
+    b = fleet.make_condition_step(pdu.make_pdu(sample_dt=1.0 / _HZ), qp_iters=25)
+    c = fleet.make_condition_step(cfg, qp_iters=30)
+    assert a is b  # equal config values -> same cached step
+    assert a is not c
+
+
+def test_shard_racks_in_jit_single_device_is_noop():
+    """On a 1-device mesh the in-jit sharding constraint must not change
+    the result (matches `rules.constrain_to_mesh`'s guard)."""
+    from repro.sharding.rules import make_mesh
+
+    s = _campus(n_racks=4, duration_s=20.0)
+    cfg = _cfg()
+    mesh = make_mesh((1,), ("data",))
+    a = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=10, chunk_intervals=2, mesh=mesh
+    )
+    b = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=10, chunk_intervals=2)
+    np.testing.assert_array_equal(np.asarray(a.campus_rack), np.asarray(b.campus_rack))
+    np.testing.assert_allclose(
+        np.asarray(a.campus_grid), np.asarray(b.campus_grid), atol=_ULP
+    )
