@@ -351,6 +351,38 @@ def bench_scenario_render():
     )
 
 
+def _mixed_campus_scenario(n_racks, duration, hz):
+    return SC.mixed_campus(
+        n_racks,
+        ("llama3_2_1b", "deepseek_v3_671b", "chatglm3_6b", "whisper_large_v3"),
+        duration_s=duration,
+        sample_hz=hz,
+        seed=3,
+        fault_at_s=duration * 0.6,
+        noise_seed=2,
+    )
+
+
+# Cross-bench wall-clock records (e.g. mixed_campus_health reports its
+# overhead against the same run's mixed_campus_fleet timing).
+LAST_US: dict[str, float] = {}
+
+
+def _best_of(run, ready, n=3):
+    """Min-of-n wall clock: this container's timings drift ±15-20% with
+    background load, so single-shot numbers routinely fake both
+    regressions and speedups.  Applies in QUICK mode too — that is the
+    mode ``--quick --gate`` times, and a gate fed single-shot numbers
+    would flap (quick workloads are small, so the extra reps are cheap)."""
+    best, out = float("inf"), None
+    for _ in range(n):
+        t0 = time.perf_counter()
+        r = run()
+        jax.block_until_ready(ready(r))
+        best, out = min(best, (time.perf_counter() - t0) * 1e6), r
+    return best, out
+
+
 def bench_mixed_campus():
     """The heterogeneous-campus acceptance scenario: 1024 racks running 4
     model-derived workloads + an inference-diurnal block, staggered job
@@ -364,25 +396,14 @@ def bench_mixed_campus():
     n_racks = _q(1024, 64)
     duration = _q(88.0, 30.0)
     hz = 200.0
-    s = SC.mixed_campus(
-        n_racks,
-        ("llama3_2_1b", "deepseek_v3_671b", "chatglm3_6b", "whisper_large_v3"),
-        duration_s=duration,
-        sample_hz=hz,
-        seed=3,
-        fault_at_s=duration * 0.6,
-        noise_seed=2,
-    )
+    s = _mixed_campus_scenario(n_racks, duration, hz)
     cfg = pdu.make_pdu(sample_dt=1.0 / hz)
     spec = compliance.GridSpec.create()
     run = lambda engine: fleet.condition_scenario_streaming(
         cfg, s, spec, engine=engine, qp_iters=30, chunk_intervals=4
     )
     run("scanned")  # compile
-    t0 = time.perf_counter()
-    res = run("scanned")
-    jax.block_until_ready(res.campus_grid)
-    us = (time.perf_counter() - t0) * 1e6
+    us, res = _best_of(lambda: run("scanned"), lambda r: r.campus_grid)
     UNITS["mixed_campus_fleet"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
 
     host = run("host")  # warm the host-loop engine
@@ -402,12 +423,45 @@ def bench_mixed_campus():
         )
 
     rg = float(res.report_grid.max_ramp)
+    LAST_US["mixed_campus_fleet"] = us
     return "mixed_campus_fleet", us, (
         f"racks={n_racks} workloads=5 campus_ramp={rg:.4f}/s "
         f"ok={bool(res.report_grid.ramp_ok)} raw_ok={bool(res.report_rack.ramp_ok)} "
         f"us_per_rack={us / n_racks:.0f} qp_resid={float(res.max_qp_residual):.2e} "
         f"host_loop_us={us_host:.0f} ({us_host / us:.2f}x scanned)"
         + (" engines_agree=True" if QUICK else "")
+    )
+
+
+def bench_mixed_campus_health():
+    """Observer overhead: the PR-3 acceptance campus re-run with the full
+    health-aware telemetry spine enabled — per-sample battery wear state
+    machine (`core.health`) folded into the conditioning scan plus the
+    streaming compliance observers — must stay within ~10% of the
+    telemetry-free `mixed_campus_fleet` wall clock."""
+    from repro.core import health as hlt
+
+    n_racks = _q(1024, 64)
+    duration = _q(88.0, 30.0)
+    hz = 200.0
+    s = _mixed_campus_scenario(n_racks, duration, hz)
+    cfg = pdu.make_pdu(sample_dt=1.0 / hz, track_health=True)
+    spec = compliance.GridSpec.create()
+    run = lambda: fleet.condition_scenario_streaming(
+        cfg, s, spec, qp_iters=30, chunk_intervals=4
+    )
+    run()  # compile
+    us, res = _best_of(run, lambda r: r.campus_grid)
+    UNITS["mixed_campus_health"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
+    base = LAST_US.get("mixed_campus_fleet")
+    overhead = f"{(us / base - 1) * 100:+.1f}%" if base else "-"
+    h = hlt.fleet_summary(res.health)
+    return "mixed_campus_health", us, (
+        f"racks={n_racks} overhead_vs_fleet={overhead} "
+        f"efc_mean={h['efc_mean']:.3f} half_cycles={h['half_cycles_mean']:.0f} "
+        f"worst_dod={h['worst_dod']:.3f} fade_max={h['fade_max']:.2e} "
+        f"life_min={h['projected_life_years_min']:.1f}y "
+        f"hf_lines_ok={bool(res.report_grid.spectrum_ok)}"
     )
 
 
@@ -425,4 +479,5 @@ ALL = [
     bench_fleet_streaming,
     bench_scenario_render,
     bench_mixed_campus,
+    bench_mixed_campus_health,
 ]

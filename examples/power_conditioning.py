@@ -93,7 +93,12 @@ def mixed_campus():
     early terminations, and a mid-trace fault cascade.  Conditioned by the
     scanned streaming engine (the default): chunk rendering and the chunk
     loop are fused into one ``lax.scan``-ned jit, so the whole campus
-    trace is synthesized and conditioned in a single dispatch."""
+    trace is synthesized and conditioned in a single dispatch — with the
+    battery wear state machine (``core.health``) and the streaming
+    compliance observers (cross-chunk ramp + Goertzel line bank) riding
+    inside the same jit."""
+    from repro.core import health as hlt
+
     hz = 200.0
     archs = ("llama3_2_1b", "deepseek_v3_671b", "whisper_large_v3")
     scen = SC.mixed_campus(
@@ -101,7 +106,7 @@ def mixed_campus():
         inference_fraction=0.25, stagger_s=20.0,
         fault_rack_fraction=0.1, fault_at_s=70.0, noise_seed=1,
     )
-    cfg = pdu.make_pdu(sample_dt=1.0 / hz)
+    cfg = pdu.make_pdu(sample_dt=1.0 / hz, track_health=True)
     spec = compliance.GridSpec.create()
     res = fleet.condition_scenario_streaming(cfg, scen, spec, qp_iters=30,
                                              chunk_intervals=4)
@@ -110,6 +115,17 @@ def mixed_campus():
           f"(ok={bool(res.report_rack.ramp_ok)}) -> conditioned "
           f"{float(res.report_grid.max_ramp):.4f}/s "
           f"(ok={bool(res.report_grid.ramp_ok)}, beta=0.1)")
+    g = res.report_grid
+    print(f"[Campus] streaming compliance verdict: ramp_ok={bool(g.ramp_ok)} "
+          f"spec_lines_ok={bool(g.spectrum_ok)} "
+          f"(worst S(f>=2Hz)={float(g.worst_high_freq_mag):.2e} vs alpha=1e-4) "
+          f"-> ok={bool(g.ok)}")
+    h = hlt.fleet_summary(res.health)
+    print(f"[Campus] fleet battery health over {scen.duration_s:.0f}s: "
+          f"EFC mean {h['efc_mean']:.3f} / max {h['efc_max']:.3f}, "
+          f"worst-rack DoD {h['worst_dod']:.3f}, "
+          f"fade max {h['fade_max']:.2e}, "
+          f"projected life >= {h['projected_life_years_min']:.1f} y")
 
 
 if __name__ == "__main__":

@@ -3,12 +3,19 @@
   filters     — passive LC input filter + damping leg (§5.1)
   ess         — battery ESS ramp-ODE control + SoC dynamics (§5.3, App. A)
   controller  — outer/inner SoC management loops (§6, App. B)
-  compliance  — grid ramp-rate + frequency-content checks (§3)
+  compliance  — grid ramp-rate + frequency-content checks (§3),
+                streaming ramp/Goertzel observers
+  health      — online battery wear: half-cycle counting + aging (§2, §6)
   sizing      — component sizing from grid spec (App. A.1)
   burn        — software GPU-burn baseline (§7.3, App. C)
   pdu         — the composed EasyRider PDU, streaming conditioner (§4)
   fleet       — campus-scale aggregation (App. D)
 """
-from repro.core import burn, compliance, controller, ess, filters, fleet, pdu, sizing
+from repro.core import (
+    burn, compliance, controller, ess, filters, fleet, health, pdu, sizing,
+)
 
-__all__ = ["burn", "compliance", "controller", "ess", "filters", "fleet", "pdu", "sizing"]
+__all__ = [
+    "burn", "compliance", "controller", "ess", "filters", "fleet", "health",
+    "pdu", "sizing",
+]

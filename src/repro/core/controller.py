@@ -104,6 +104,10 @@ class ControllerConfig:
     lam_delta: jax.Array = None  # command smoothness weight
     lam_term: jax.Array = None  # terminal tracking weight
     meas_tau: jax.Array = None  # BMS SoC measurement EMA time constant [s]
+    # Health-aware outer loop: scales the storage-mode excursion with the
+    # battery's consumed cycle life (0.0 = off, bit-identical to the
+    # wear-blind policy).
+    wear_gain: jax.Array = None
 
     @staticmethod
     def create(
@@ -120,6 +124,7 @@ class ControllerConfig:
         lam_delta: float = 1e-1,
         lam_term: float = 4.0,
         meas_tau: float = 60.0,
+        wear_gain: float = 0.0,
     ) -> "ControllerConfig":
         f = lambda v: jnp.asarray(v, jnp.float32)
         return ControllerConfig(
@@ -136,6 +141,7 @@ class ControllerConfig:
             lam_delta=f(lam_delta),
             lam_term=f(lam_term),
             meas_tau=f(meas_tau),
+            wear_gain=f(wear_gain),
         )
 
 
@@ -148,6 +154,7 @@ def select_target(
     cfg: ControllerConfig,
     ess: ESSParams,
     idle_remaining_s: jax.Array,
+    wear: jax.Array | float = 0.0,
 ) -> jax.Array:
     """Target S* given the predicted remaining idle time.
 
@@ -156,14 +163,24 @@ def select_target(
     idle budget — the time left minus the time needed to charge back to
     S_mid at the maximum corrective rate.  When the budget can no longer
     cover the return charge, the target reverts to S_mid.
+
+    ``wear`` is the battery's consumed cycle-life fraction (per rack; see
+    ``core.health.cycle_life_fraction``).  With ``cfg.wear_gain > 0`` the
+    allowed storage-mode excursion shrinks as cycle damage accumulates —
+    an aging battery is cycled progressively shallower, the paper's
+    "maximize lifetime" knob.  A negative gain *widens* the excursion
+    instead (calendar-dominated installs that want to park lower for
+    longer).  ``wear_gain = 0`` (default) multiplies the excursion by
+    exactly 1.0, so the wear-blind policy is reproduced bit-for-bit.
     """
     # Max SoC rate of change at the corrective current limit.
     charge_rate = cfg.i_max * ess.eta_c / ess.q_max  # [1/s] charging
     discharge_rate = cfg.i_max / (ess.eta_d * ess.q_max)  # [1/s] discharging
 
-    # Eq. 11 floor.
+    # Eq. 11 floor, with the wear-scaled excursion.
+    delta_s_eff = cfg.delta_s_max * jnp.maximum(1.0 - cfg.wear_gain * wear, 0.0)
     s_floor = jnp.maximum(
-        jnp.maximum(cfg.s_idle, cfg.s_mid - cfg.delta_s_max), ess.soc_safe_min
+        jnp.maximum(cfg.s_idle, cfg.s_mid - delta_s_eff), ess.soc_safe_min
     )
 
     # Usable budget: descend for t_down, return for t_up; t_down+t_up<=idle.

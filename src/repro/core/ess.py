@@ -105,6 +105,20 @@ def soc_increment(p: ESSParams, battery_power: jax.Array, dt: float) -> jax.Arra
     return (dt / p.q_max) * (p.eta_c * charge - discharge / p.eta_d)
 
 
+def battery_power_from_soc_delta(
+    p: ESSParams, d_soc: jax.Array, dt: float
+) -> jax.Array:
+    """Inverse of ``soc_increment``: the (signed, terminal-side) battery
+    power implied by an observed per-sample SoC step.
+
+    The sign of the step selects the efficiency branch, so the inversion is
+    exact for any post-saturation SoC trajectory: a BMS that only sees SoC
+    can still coulomb-count terminal throughput (``core.health`` uses this
+    for the Ah-throughput accumulator)."""
+    q = d_soc * (p.q_max / dt)
+    return jnp.where(d_soc > 0, q / p.eta_c, q * p.eta_d)
+
+
 def step(
     p: ESSParams,
     state: ESSState,

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, pdu
+from repro.core import compliance, health as hlt, pdu
 
 
 def synchronous_aggregate(rack_power: jax.Array, n_racks: int) -> jax.Array:
@@ -68,6 +68,10 @@ class FleetResult(NamedTuple):
     campus_grid: jax.Array  # (T,) mean per-unit conditioned campus load
     report_rack: compliance.ComplianceReport
     report_grid: compliance.ComplianceReport
+    # Per-rack wear report; when the config does not track health this is
+    # the report of an empty history (zero cycles/fade, INFINITE projected
+    # lifetime — mind the inf if serializing).
+    health: hlt.HealthReport
 
 
 def condition_fleet(
@@ -88,7 +92,7 @@ def condition_fleet(
     """
     r0 = traces[0]
     state = pdu.init_state(cfg, r0, soc0=soc0)
-    grid, _, _ = pdu.condition(cfg, state, traces, qp_iters=qp_iters, use_plan=use_plan)
+    grid, state_f, _ = pdu.condition(cfg, state, traces, qp_iters=qp_iters, use_plan=use_plan)
     campus_rack = jnp.mean(traces, axis=1)
     campus_grid = jnp.mean(grid, axis=1)
     return FleetResult(
@@ -97,7 +101,14 @@ def condition_fleet(
         campus_grid=campus_grid,
         report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
         report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
+        health=hlt.report(
+            _health_params(cfg), cfg.ess_params, state_f.health, cfg.sample_dt
+        ),
     )
+
+
+def _health_params(cfg: pdu.PDUConfig) -> hlt.HealthParams:
+    return cfg.health if cfg.health is not None else hlt.HealthParams.create()
 
 
 # ----------------------------------------------------------------- streaming
@@ -111,6 +122,50 @@ class StreamingFleetResult(NamedTuple):
     report_grid: compliance.ComplianceReport
     state: pdu.PDUState  # final per-rack PDU state (the stream can resume)
     max_qp_residual: jax.Array  # worst per-interval QP primal residual seen
+    health_trace: jax.Array  # (n_chunks, 3) [mean EFC, max fade, max DoD]
+    # Per-rack wear report; an untracked config yields the empty-history
+    # report (zero cycles/fade, INFINITE projected lifetime).
+    health: hlt.HealthReport
+
+
+class _Observers(NamedTuple):
+    """Streaming compliance state folded inside the engines' jitted steps:
+    reports come from these, not from re-diffing/FFT-ing materialized
+    campus arrays — so compliance is available online however long the
+    stream runs (and the cross-chunk boundary ramp is never dropped)."""
+
+    ramp_rack: compliance.RampObserver
+    ramp_grid: compliance.RampObserver
+    spec_rack: compliance.SpectrumObserver
+    spec_grid: compliance.SpectrumObserver
+
+
+def _observers_init(bank: compliance.SpectrumBank) -> _Observers:
+    return _Observers(
+        ramp_rack=compliance.ramp_observer_init(),
+        ramp_grid=compliance.ramp_observer_init(),
+        spec_rack=compliance.spectrum_observer_init(bank),
+        spec_grid=compliance.spectrum_observer_init(bank),
+    )
+
+
+def _observers_update(
+    obs: _Observers, bank: compliance.SpectrumBank, ch: pdu.CampusChunk, dt: float
+) -> _Observers:
+    return _Observers(
+        ramp_rack=compliance.ramp_observer_update(obs.ramp_rack, ch.campus_rack, dt),
+        ramp_grid=compliance.ramp_observer_update(obs.ramp_grid, ch.campus_grid, dt),
+        spec_rack=compliance.spectrum_observer_update(bank, obs.spec_rack, ch.campus_rack),
+        spec_grid=compliance.spectrum_observer_update(bank, obs.spec_grid, ch.campus_grid),
+    )
+
+
+def _make_bank(
+    grid_spec: compliance.GridSpec, cfg: pdu.PDUConfig, n_total: int
+) -> compliance.SpectrumBank:
+    return compliance.make_bank(
+        n_total, cfg.sample_dt, float(np.asarray(grid_spec.f_c))
+    )
 
 
 class _CampusAccum(NamedTuple):
@@ -120,6 +175,8 @@ class _CampusAccum(NamedTuple):
     campus_grid: jax.Array  # (n_chunks * chunk,)
     soc_mean: jax.Array  # (n_chunks * chunk_intervals,)
     worst: jax.Array  # () running max QP primal residual
+    health_trace: jax.Array  # (n_chunks, 3) fleet wear snapshot per chunk
+    obs: _Observers  # streaming compliance state
 
 
 # The streaming engines close their jitted steps over a concrete PDUConfig
@@ -173,7 +230,7 @@ def make_condition_step(cfg: pdu.PDUConfig, *, qp_iters: int = 30, donate: bool 
     return _cached_engine(_engine_key(cfg, "condition_step", qp_iters, donate), build)
 
 
-def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis):
+def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
     """Cached jitted host-loop chunk step: condition + accumulate on-device.
 
     Campus aggregates are written into the preallocated ``_CampusAccum``
@@ -203,26 +260,46 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis):
                     acc.soc_mean, ch.soc_mean, (c_idx * n_int,)
                 ),
                 worst=jnp.maximum(acc.worst, ch.max_qp_residual),
+                health_trace=jax.lax.dynamic_update_slice(
+                    acc.health_trace, ch.health[None], (c_idx, 0)
+                ),
+                obs=_observers_update(acc.obs, bank, ch, cfg.sample_dt),
             )
             return st2, acc2
 
         return step
 
     return _cached_engine(
-        _engine_key(cfg, "host_stream", qp_iters, chunk, n_int, mesh, rack_axis),
+        _engine_key(cfg, "host_stream", qp_iters, chunk, n_int, mesh, rack_axis,
+                    bank),
         build,
     )
 
 
-def _finish_streaming(cfg, grid_spec, state, campus_rack, campus_grid, soc_mean, worst):
+def _finish_streaming(
+    cfg, grid_spec, state, campus_rack, campus_grid, soc_mean, worst,
+    bank, obs, health_trace,
+):
+    """Assemble the result from streaming state: the compliance reports
+    come from the cross-chunk observers (exact ramp, Goertzel spec lines),
+    not from re-analyzing the materialized campus arrays — the arrays are
+    returned for plotting/diagnostics but no longer gate compliance."""
     return StreamingFleetResult(
         campus_rack=campus_rack,
         campus_grid=campus_grid,
         soc_mean=soc_mean,
-        report_rack=compliance.check(campus_rack, cfg.sample_dt, grid_spec),
-        report_grid=compliance.check(campus_grid, cfg.sample_dt, grid_spec),
+        report_rack=compliance.report_from_observers(
+            grid_spec, obs.ramp_rack, bank, obs.spec_rack
+        ),
+        report_grid=compliance.report_from_observers(
+            grid_spec, obs.ramp_grid, bank, obs.spec_grid
+        ),
         state=state,
         max_qp_residual=worst,
+        health_trace=health_trace,
+        health=hlt.report(
+            _health_params(cfg), cfg.ess_params, state.health, cfg.sample_dt
+        ),
     )
 
 
@@ -288,12 +365,15 @@ def condition_fleet_streaming(
         # checkpoint survives (and can seed several continuations).
         state = jax.tree_util.tree_map(jnp.copy, state)
 
-    step = _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis)
+    bank = _make_bank(grid_spec, cfg, t_total)
+    step = _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank)
     acc = _CampusAccum(
         campus_rack=jnp.zeros((n_chunks * chunk,), jnp.float32),
         campus_grid=jnp.zeros((n_chunks * chunk,), jnp.float32),
         soc_mean=jnp.zeros((n_chunks * n_int,), jnp.float32),
         worst=jnp.zeros((), jnp.float32),
+        health_trace=jnp.zeros((n_chunks, 3), jnp.float32),
+        obs=_observers_init(bank),
     )
     for c_idx, t0 in enumerate(range(0, t_total, chunk)):
         # The trailing partial chunk runs at its natural length (one extra
@@ -311,10 +391,11 @@ def condition_fleet_streaming(
         cfg, grid_spec, state,
         acc.campus_rack[:t_total], acc.campus_grid[:t_total],
         acc.soc_mean[:n_ctrl], acc.worst,
+        bank, acc.obs, acc.health_trace,
     )
 
 
-def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis):
+def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
     """Cached jitted scanned engine: the whole trace in ONE dispatch.
 
     ``jax.lax.scan`` walks the chunk index over the ``n_full`` full chunks;
@@ -345,39 +426,49 @@ def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis):
     def build():
         @functools.partial(jax.jit, donate_argnums=(1,))
         def run(scen, st, start):
+            obs = _observers_init(bank)
+
             def body(carry, c_idx):
+                st, obs = carry
                 tr = prep(SC.render(scen, start + c_idx * chunk, chunk))
-                return pdu.condition_campus(cfg, carry, tr, qp_iters=qp_iters)
+                st2, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+                obs2 = _observers_update(obs, bank, ch, cfg.sample_dt)
+                return (st2, obs2), ch
 
             parts = []
             worst = []
+            htrace = []
             if n_full:
-                st, ch = jax.lax.scan(
-                    body, st, jnp.arange(n_full, dtype=jnp.int32)
+                (st, obs), ch = jax.lax.scan(
+                    body, (st, obs), jnp.arange(n_full, dtype=jnp.int32)
                 )
                 parts.append(pdu.CampusChunk(
                     ch.campus_rack.reshape(-1), ch.campus_grid.reshape(-1),
-                    ch.soc_mean.reshape(-1), None,
+                    ch.soc_mean.reshape(-1), None, None,
                 ))
                 worst.append(jnp.max(ch.max_qp_residual))
+                htrace.append(ch.health)  # (n_full, 3)
             if rem:
                 tr = prep(SC.render(scen, start + n_full * chunk, rem))
                 st, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+                obs = _observers_update(obs, bank, ch, cfg.sample_dt)
                 parts.append(ch)
                 worst.append(ch.max_qp_residual)
+                htrace.append(ch.health[None])  # (1, 3)
             cat = lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs)
             return st, pdu.CampusChunk(
                 campus_rack=cat([p.campus_rack for p in parts]),
                 campus_grid=cat([p.campus_grid for p in parts]),
                 soc_mean=cat([p.soc_mean for p in parts]),
                 max_qp_residual=functools.reduce(jnp.maximum, worst),
-            )
+                health=cat(htrace),
+            ), obs
 
         return run
 
     return _cached_engine(
         _engine_key(cfg, "scanned", qp_iters, chunk, n_full, rem,
-                    mesh, rack_axis),
+                    mesh, rack_axis, bank),
         build,
     )
 
@@ -457,12 +548,14 @@ def condition_scenario_scanned(
         # checkpoint survives (and can seed several continuations).
         state = jax.tree_util.tree_map(jnp.copy, state)
 
-    run = _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis)
-    state_f, ch = run(scenario, state, jnp.asarray(start, jnp.int32))
+    bank = _make_bank(grid_spec, cfg, t_total)
+    run = _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank)
+    state_f, ch, obs = run(scenario, state, jnp.asarray(start, jnp.int32))
     return _finish_streaming(
         cfg, grid_spec, state_f,
         ch.campus_rack[:t_total], ch.campus_grid[:t_total],
         ch.soc_mean[:n_ctrl], ch.max_qp_residual,
+        bank, obs, ch.health,
     )
 
 

@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import compliance, controller as ctrl, ess, filters, sizing
+from repro.core import compliance, controller as ctrl, ess, filters, health as hlt, sizing
 from repro.kernels import ops
 from repro.utils import pytree_dataclass, static_field
 
@@ -33,8 +33,13 @@ class PDUConfig:
     filter_params: filters.LCFilterParams  # per-unit
     ess_params: ess.ESSParams
     controller: ctrl.ControllerConfig
+    health: hlt.HealthParams = None  # aging model (used when track_health)
     sample_dt: float = static_field(default=1e-3)  # trace sample period [s]
     software_enabled: bool = static_field(default=True)
+    # Fold per-sample battery wear telemetry (core.health) into the
+    # conditioning scan.  Pure observation — grid/SoC outputs are
+    # unchanged — but it costs a second per-sample scan, so it is opt-in.
+    track_health: bool = static_field(default=False)
 
 
 def per_unit_filter(s: sizing.SizingResult, rack: sizing.RackRating) -> filters.LCFilterParams:
@@ -56,6 +61,8 @@ def make_pdu(
     ramp_margin: float = 1.6,
     software_enabled: bool = True,
     controller_cfg: ctrl.ControllerConfig | None = None,
+    health_params: hlt.HealthParams | None = None,
+    track_health: bool = False,
 ) -> PDUConfig:
     """Size and assemble an EasyRider PDU for a rack + grid spec.
 
@@ -93,8 +100,10 @@ def make_pdu(
         filter_params=per_unit_filter(s, rack),
         ess_params=ess_params,
         controller=controller_cfg or ctrl.ControllerConfig.create(),
+        health=health_params or hlt.HealthParams.create(),
         sample_dt=sample_dt,
         software_enabled=software_enabled,
+        track_health=track_health,
     )
 
 
@@ -107,6 +116,7 @@ class PDUState(NamedTuple):
     cmd_target: jax.Array  # corrective power to slew toward this interval
     soc_ema: jax.Array  # BMS measurement filter (slow SoC estimate)
     qp_warm: ctrl.QPWarmState  # ADMM iterates carried across intervals/chunks
+    health: hlt.HealthState  # battery wear telemetry (zeros unless tracked)
 
 
 def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDUState:
@@ -124,6 +134,7 @@ def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDU
         cmd_target=jnp.zeros_like(r0),
         soc_ema=jnp.full_like(r0, soc0),
         qp_warm=ctrl.init_warm(cfg.controller.horizon, r0.shape),
+        health=hlt.init_state(jnp.full_like(r0, soc0)),
     )
 
 
@@ -186,42 +197,69 @@ def condition(
     plan = ctrl.make_plan(cfg.controller, cfg.ess_params) if (
         cfg.software_enabled and use_plan
     ) else None
+    hw_kw = dict(
+        beta=float(ep.beta), dt=dt, q_max=float(ep.q_max),
+        eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+        p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+        soc_max=float(ep.soc_safe_max),
+    )
+    hconsts = hlt.step_consts(cfg.health) if cfg.track_health else None
 
     def interval(carry, rack_chunk):
-        x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, step_idx = carry
+        (
+            x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, hstate,
+            step_idx,
+        ) = carry
 
         # --- hardware path: fused ESS + SoC + LC simulation --------------
         # (single pass; Pallas kernel on TPU, fused scan elsewhere —
         # 1.6x wall clock over the staged pipeline, EXPERIMENTS §Perf-1)
         corr_profile = cmd_applied + (cmd_target - cmd_applied) * ramp01  # (k, ...)
         batched = rack_chunk.ndim > 1
+        lift = (lambda x: x) if batched else (lambda x: x[None])
         rc = rack_chunk if batched else rack_chunk[:, None]
         cp = corr_profile if batched else corr_profile[:, None]
-        g0 = es.g_filter if batched else es.g_filter[None]
-        s0 = es.soc if batched else es.soc[None]
-        xf0 = x_f if batched else x_f[None]
-        grid, _, (g_f, soc_f, x_new) = ops.pdu_sim(
-            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp,
-            beta=float(ep.beta), dt=dt, q_max=float(ep.q_max),
-            eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
-            p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
-            soc_max=float(ep.soc_safe_max),
+        g0, s0, xf0 = lift(es.g_filter), lift(es.soc), lift(x_f)
+        grid, soc_path, (g_f, soc_f, x_new) = ops.pdu_sim(
+            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp, **hw_kw
         )
         if not batched:
             grid, g_f, soc_f, x_new = grid[:, 0], g_f[0], soc_f[0], x_new[0]
+            soc_path = soc_path[:, 0]
         es2 = ess.ESSState(g_filter=g_f, soc=soc_f)
         x_f2 = x_new
+
+        # --- health telemetry: fold the interval's SoC path --------------
+        # (pure observation: grid/SoC outputs untouched.  A second scan
+        # over the kernel's SoC output is the profiled optimum: folding
+        # the 9 wear carries INTO the pdu_sim scan spills its L1 working
+        # set at fleet width — measured 3x slower — and hoisting the fold
+        # out of the interval scan forces a (T, R) SoC materialization
+        # that costs more than the nested scan saves.)
+        if cfg.track_health:
+            hstate2 = hlt.update_consts(hconsts, hstate, soc_path)
+            # Wear feedback reads the PRE-interval state: one control
+            # interval (5 s) of staleness is nothing on aging timescales,
+            # and it takes the wear fold off the controller's critical
+            # path (the fold and the QP chain only share pdu_sim's
+            # outputs, so the runtime can overlap them).
+            wear = hlt.cycle_life_fraction(cfg.health, hstate)
+        else:
+            hstate2 = hstate
+            wear = jnp.asarray(0.0, jnp.float32)
 
         # --- software path: one controller step --------------------------
         idle_left = jnp.maximum(
             jnp.asarray(idle_remaining_s, jnp.float32) - step_idx * k * dt, 0.0
         )
-        s_target = ctrl.select_target(cfg.controller, cfg.ess_params, idle_left)
+        s_target = ctrl.select_target(
+            cfg.controller, cfg.ess_params, idle_left, wear
+        )
         soc_meas = soc_ema + meas_w * (es2.soc - soc_ema)
 
-        def run_ctrl(soc, up):
+        def run_ctrl(soc, up, tgt):
             out = ctrl.inner_loop_step(
-                cfg.controller, cfg.ess_params, soc, s_target, up, qp_iters=qp_iters
+                cfg.controller, cfg.ess_params, soc, tgt, up, qp_iters=qp_iters
             )
             return out.corrective_power, out.qp_primal_residual
 
@@ -236,7 +274,10 @@ def condition(
             vec_ctrl = run_ctrl
             for _ in range(soc_meas.ndim):
                 vec_ctrl = jax.vmap(vec_ctrl)
-            new_cmd, resid = vec_ctrl(soc_meas, u_prev)
+            new_cmd, resid = vec_ctrl(
+                soc_meas, jnp.broadcast_to(u_prev, soc_meas.shape),
+                jnp.broadcast_to(s_target, soc_meas.shape),
+            )
             warm2 = warm
         else:
             new_cmd = jnp.zeros_like(soc_meas)
@@ -249,24 +290,24 @@ def condition(
         )
         carry2 = (
             x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
-            warm2, step_idx + 1,
+            warm2, hstate2, step_idx + 1,
         )
         return carry2, (grid, telem)
 
     carry0 = (
         state.filter_state, state.ess_state, state.u_prev,
         state.cmd_applied, state.cmd_target, state.soc_ema, state.qp_warm,
-        jnp.asarray(0.0, jnp.float32),
+        state.health, jnp.asarray(0.0, jnp.float32),
     )
     (
-        (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, _),
+        (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, h_f, _),
         (grid_chunks, telem),
     ) = jax.lax.scan(interval, carry0, chunks)
     grid = grid_chunks.reshape((n_ctrl * k,) + rack_power.shape[1:])[:t]
     new_state = PDUState(
         filter_state=x_f, filter_obj=filt, ess_state=es_f, u_prev=u_prev,
         cmd_applied=cmd_applied, cmd_target=cmd_target, soc_ema=soc_ema,
-        qp_warm=warm_f,
+        qp_warm=warm_f, health=h_f,
     )
     return grid, new_state, Telemetry(
         soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3]
@@ -280,6 +321,7 @@ class CampusChunk(NamedTuple):
     campus_grid: jax.Array  # (T,) mean conditioned campus load
     soc_mean: jax.Array  # (n_ctrl,) fleet-mean SoC per control interval
     max_qp_residual: jax.Array  # () worst QP primal residual in the chunk
+    health: jax.Array  # (3,) [mean EFC, max fade, max DoD] at chunk end
 
 
 def condition_campus(
@@ -297,14 +339,21 @@ def condition_campus(
     streaming engine that only needs campus-level compliance never
     materializes the conditioned (T, R) block outside the step.  Shared by
     the host-loop and scanned fleet engines so their per-chunk arithmetic
-    is identical by construction.
+    is identical by construction.  ``health`` is the fleet wear snapshot at
+    the chunk's end (zeros unless ``cfg.track_health``) — the online
+    telemetry a campus operator would chart.
     """
     grid, state2, telem = condition(cfg, state, rack_power, qp_iters=qp_iters, use_plan=use_plan)
+    if cfg.track_health:
+        hsnap = hlt.chunk_aggregates(cfg.health, state2.health, cfg.sample_dt)
+    else:
+        hsnap = jnp.zeros((3,), jnp.float32)
     return state2, CampusChunk(
         campus_rack=jnp.mean(rack_power, axis=1),
         campus_grid=jnp.mean(grid, axis=1),
         soc_mean=jnp.mean(telem.soc, axis=1),
         max_qp_residual=jnp.max(telem.qp_residual),
+        health=hsnap,
     )
 
 

@@ -4,8 +4,17 @@ Each training step contributes a phase timeline (compute -> exposed
 collective; checkpoint stalls when they happen) derived from the step's
 cost model.  PowerSim renders those phases to a rack power trace at
 ``sample_hz``, streams it through the EasyRider PDU (state carried across
-steps), monitors compliance online, and exposes battery SoC telemetry —
-which the fault-tolerance layer uses for emergency checkpoints.
+steps), monitors compliance online, and exposes battery SoC + wear
+telemetry — which the fault-tolerance layer uses for emergency
+checkpoints.
+
+Monitoring is fully streaming: cross-chunk ramp observers (the boundary
+sample between consecutive conditioned chunks is carried, so a step
+landing exactly on a chunk boundary is never missed) and an online
+Goertzel line bank replace the old host-side trace accumulation — an
+arbitrarily long training run holds O(1) monitoring state instead of the
+whole rack/grid waveform.  Battery health (cycle counting + aging) rides
+inside the conditioning scan via ``core.health``.
 
 This is the "no software changes required" property in practice: the
 trainer does nothing but *report* when steps happen; conditioning runs
@@ -18,7 +27,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, fleet, pdu
+from repro.core import compliance, fleet, health as hlt, pdu
 from repro.power import phases as P
 from repro.power import scenario as SC
 from repro.power.device import DevicePower
@@ -31,6 +40,8 @@ class PowerSimConfig:
     # Accelerator power model driving phase rendering (idle/comm power
     # fractions); None keeps the PhaseModel's own device (default TPU_V5E).
     device: DevicePower | None = None
+    # Battery wear telemetry folded into the conditioning scan.
+    track_health: bool = True
 
 
 class PowerSim:
@@ -48,13 +59,22 @@ class PowerSim:
         self.cost = cost
         self.hw = hw
         self.model = model
-        self.pdu_cfg = pdu.make_pdu(sample_dt=1.0 / self.cfg.sample_hz)
+        self.pdu_cfg = pdu.make_pdu(
+            sample_dt=1.0 / self.cfg.sample_hz,
+            track_health=self.cfg.track_health,
+        )
         self.state = None
-        self.max_ramp_seen = 0.0
-        self.worst_hf_seen = 0.0
         self.soc = 0.5
-        self.grid_trace_chunks: list[np.ndarray] = []
-        self.rack_trace_chunks: list[np.ndarray] = []
+        # Streaming monitors: O(1) state however long the run.  The run's
+        # total length is unknown up front, so the spectral bank runs
+        # open-ended (rectangular window, fixed operator line grid).
+        self._ramp_rack = compliance.ramp_observer_init()
+        self._ramp_grid = compliance.ramp_observer_init()
+        self._bank = compliance.make_online_bank(
+            1.0 / self.cfg.sample_hz, float(np.asarray(self.grid_spec.f_c))
+        )
+        self._spec_rack = compliance.spectrum_observer_init(self._bank)
+        self._spec_grid = compliance.spectrum_observer_init(self._bank)
         # Streaming contract: pdu.condition advances whole controller
         # intervals (k samples); sub-interval chunks would desync the
         # carried state, so we buffer until a full interval is available.
@@ -68,10 +88,14 @@ class PowerSim:
         # pdu.condition on every training step.
         self._step = fleet.make_condition_step(self.pdu_cfg, qp_iters=25)
 
+    @property
+    def max_ramp_seen(self) -> float:
+        return float(np.asarray(self._ramp_grid.max_ramp))
+
     def _condition(self, chunk: jnp.ndarray, dt: float) -> None:
         # Device-resident buffering: rendered step chunks stay on device
-        # through concatenation, conditioning, and slicing; the only
-        # host transfers are the np.asarray bookkeeping copies for report().
+        # through concatenation, conditioning, slicing, and the streaming
+        # observers; the only host transfer is the scalar SoC readout.
         self._pending = jnp.concatenate([self._pending, chunk])
         n = (self._pending.shape[0] // self._k) * self._k
         if n == 0:
@@ -81,11 +105,14 @@ class PowerSim:
             self.state = pdu.init_state(self.pdu_cfg, trace[0])
         grid, self.state, telem = self._step(self.state, trace)
         self.soc = float(np.asarray(telem.soc)[-1])
-        self.max_ramp_seen = max(
-            self.max_ramp_seen, float(compliance.max_abs_ramp(grid, dt))
+        self._ramp_rack = compliance.ramp_observer_update(self._ramp_rack, trace, dt)
+        self._ramp_grid = compliance.ramp_observer_update(self._ramp_grid, grid, dt)
+        self._spec_rack = compliance.spectrum_observer_update(
+            self._bank, self._spec_rack, trace
         )
-        self.rack_trace_chunks.append(np.asarray(trace))
-        self.grid_trace_chunks.append(np.asarray(grid))
+        self._spec_grid = compliance.spectrum_observer_update(
+            self._bank, self._spec_grid, grid
+        )
 
     def on_step(self, *, checkpoint_stall: bool = False) -> None:
         durs, pows = P.step_phases(self.cost, self.hw, self.model)
@@ -100,15 +127,31 @@ class PowerSim:
         self._condition(chunk, dt)
 
     def report(self) -> dict:
-        rack = np.concatenate(self.rack_trace_chunks) if self.rack_trace_chunks else np.zeros(1)
-        grid = np.concatenate(self.grid_trace_chunks) if self.grid_trace_chunks else np.zeros(1)
-        dt = 1.0 / self.cfg.sample_hz
-        rep_rack = compliance.check(jnp.asarray(rack), dt, self.grid_spec)
-        rep_grid = compliance.check(jnp.asarray(grid), dt, self.grid_spec)
-        return {
+        rep_rack = compliance.report_from_observers(
+            self.grid_spec, self._ramp_rack, self._bank, self._spec_rack
+        )
+        rep_grid = compliance.report_from_observers(
+            self.grid_spec, self._ramp_grid, self._bank, self._spec_grid
+        )
+        out = {
             "rack_max_ramp": float(rep_rack.max_ramp),
             "grid_max_ramp": float(rep_grid.max_ramp),
             "grid_ramp_ok": bool(rep_grid.ramp_ok),
             "grid_worst_hf": float(rep_grid.worst_high_freq_mag),
             "final_soc": self.soc,
         }
+        if self.cfg.track_health and self.state is not None:
+            rep = hlt.report(
+                self.pdu_cfg.health, self.pdu_cfg.ess_params,
+                self.state.health, 1.0 / self.cfg.sample_hz,
+            )
+            out.update(
+                battery_efc=float(np.asarray(rep.efc)),
+                battery_half_cycles=float(np.asarray(rep.half_cycles)),
+                battery_max_dod=float(np.asarray(rep.max_dod)),
+                battery_capacity_fade=float(np.asarray(rep.capacity_fade)),
+                battery_projected_life_years=float(
+                    np.asarray(rep.projected_life_s) / (365.25 * 86400.0)
+                ),
+            )
+        return out
