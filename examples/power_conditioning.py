@@ -128,6 +128,85 @@ def mixed_campus():
           f"projected life >= {h['projected_life_years_min']:.1f} y")
 
 
+def degraded_campus_service():
+    """Failure engine + operator service: a campus under a stochastic
+    fault soup, driven window-by-window by ``serve.ConditionerService``.
+
+    A ``FaultProcess`` samples exponential fault/repair episodes into the
+    scenario IR (rack power losses, ESS trips, sensor-dropout NaN
+    windows); the degraded-mode conditioner masks tripped ESS units into
+    LC passthrough — with the per-sample converter wind-down weight so
+    trips land at their true sample — and bridges sensor-dark samples.
+    Mid-stream, the operator checkpoints during an outage, trips two more
+    racks manually (the audited kill switch), and a second service
+    restores the checkpoint bitwise to finish the stream.  Every fault
+    edge, degraded entry/exit, manual override, checkpoint, and window
+    verdict lands in the append-only audit log."""
+    import tempfile, os as _os
+
+    from repro.power import faults as FLT
+    from repro.serve import ConditionerService
+
+    hz = 200.0
+    duration = 60.0
+    scen = SC.mixed_campus(
+        32, ("llama3_2_1b", "chatglm3_6b"), duration_s=duration,
+        sample_hz=hz, seed=5, fault_rack_fraction=0.0, edge_pad="clamp",
+        noise_seed=4,
+    )
+    proc = FLT.FaultProcess.create(
+        rack_mtbf_s=duration * 4.0, rack_mttr_s=duration * 0.2,
+        ess_mtbf_s=duration * 2.0, ess_mttr_s=duration * 0.4,
+        sensor_mtbf_s=duration * 3.0, sensor_mttr_s=duration * 0.1,
+    )
+    sched = FLT.sample_schedule(proc, 32, scen.total_samples, hz, seed=9)
+    scen = SC.attach_faults(scen, sched)
+    cfg = pdu.make_pdu(sample_dt=1.0 / hz, degraded_mode=True)
+    spec = compliance.GridSpec.create()
+
+    with tempfile.TemporaryDirectory() as td:
+        svc = ConditionerService(
+            cfg, scen, spec, chunk_intervals=2, qp_iters=30,
+            audit_path=_os.path.join(td, "audit.jsonl"),
+        )
+        svc.advance()  # windows 1-2: ride into the fault soup
+        svc.advance()
+        ckpt = svc.checkpoint(_os.path.join(td, "mid_outage.ckpt"))
+        svc.inject_fault([3, 7], reason="breaker inspection")
+        svc.advance()
+        st = svc.status()
+        print(f"[Serve ] {st['n_racks']} racks at t={st['position_s']:.0f}s: "
+              f"degraded={st['degraded_active']} "
+              f"manual_offline={st['manual_offline_racks']} "
+              f"audit_events={st['audit_events']}")
+
+        # A fresh service restores the mid-outage checkpoint (state and
+        # stream position, taken before the manual trip) and finishes the
+        # stream — bitwise-identical to never having crashed.
+        svc2 = ConditionerService(
+            cfg, scen, spec, chunk_intervals=2, qp_iters=30,
+            audit_path=_os.path.join(td, "audit2.jsonl"),
+        )
+        svc2.restore(ckpt)
+        worst = 1.0
+        while not svc2.exhausted:
+            res = svc2.advance()
+            worst = min(worst, float(np.asarray(res.ess_online_frac).min()))
+        viol = sum(1 for ev in svc2.audit.tail(10 ** 6)
+                   if ev.get("event") == "compliance_violation")
+        # At 32 racks a heavy fault soup CAN break the campus ramp spec —
+        # per-rack passthrough transients don't average out in a small
+        # fleet (the 1024-rack acceptance bench holds the spec at ~30%
+        # offline).  The service's job is to catch and audit exactly that.
+        print(f"[Serve ] resumed from {ckpt.split('/')[-1]} and finished: "
+              f"worst window online_frac={worst:.2f}, "
+              f"compliance violations audited={viol}")
+        print("[Serve ] audit tail:")
+        for ev in svc2.audit.tail(4):
+            keys = {k: v for k, v in ev.items() if k not in ("ts",)}
+            print(f"         {keys}")
+
+
 if __name__ == "__main__":
     fig7()
     fig9_fig10()
@@ -135,3 +214,4 @@ if __name__ == "__main__":
     fig12()
     fig13()
     mixed_campus()
+    degraded_campus_service()

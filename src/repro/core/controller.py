@@ -520,6 +520,7 @@ def inner_loop_step_plan(
     warm: QPWarmState | None = None,
     *,
     qp_iters: int = 30,
+    active: jax.Array | None = None,
 ) -> tuple[ControllerOutput, QPWarmState]:
     """Factor-free batched control step against a precomputed plan.
 
@@ -527,6 +528,13 @@ def inner_loop_step_plan(
     deadband), but the QP assembly is two rank-1 updates, the solve is
     batched over every rack at once, and the returned ``QPWarmState`` seeds
     the next control interval.
+
+    ``active`` masks degraded racks whose ESS unit is offline: their
+    command and reported residual are zeroed and — critically for
+    warm-started operation — their warm iterates are reset, so a unit that
+    trips and later recovers re-enters with a valid cold start rather than
+    ADMM iterates frozen from the pre-fault problem.  ``active=None`` is
+    bitwise identical to the unmasked step.
     """
     h = plan.horizon
     batch_shape = jnp.shape(soc_now)
@@ -543,6 +551,10 @@ def inner_loop_step_plan(
         up = jnp.reshape(jnp.broadcast_to(u_prev, batch_shape), (-1,))
     else:
         soc, tgt, up = soc_now, s_target, u_prev
+    act = None
+    if active is not None:
+        act = jnp.broadcast_to(active, batch_shape)
+        act = (jnp.reshape(act, (-1,)) if batch_shape else act) > 0
 
     q, lo, hi = _qp_state_terms(plan, soc, tgt, up)
     w = None if warm is None else QPWarmState(flat(warm.x), flat(warm.z), flat(warm.y))
@@ -550,6 +562,15 @@ def inner_loop_step_plan(
     i0 = jnp.clip(sol.x[0] - sol.x[h], -cfg.i_max, cfg.i_max)
     in_deadband = jnp.abs(soc - tgt) <= cfg.deadband
     i0 = jnp.where(in_deadband, 0.0, i0)
+    resid = sol.primal_residual
+    if act is not None:
+        i0 = jnp.where(act, i0, 0.0)
+        resid = jnp.where(act, resid, 0.0)
+        w2 = QPWarmState(
+            x=jnp.where(act, w2.x, 0.0),
+            z=jnp.where(act, w2.z, 0.0),
+            y=jnp.where(act, w2.y, 0.0),
+        )
 
     def back(a):
         return jnp.reshape(a, batch_shape) if batch_shape else a
@@ -558,7 +579,7 @@ def inner_loop_step_plan(
         corrective_power=back(i0),
         s_target=back(tgt) if batch_shape else s_target,
         in_deadband=back(in_deadband),
-        qp_primal_residual=back(sol.primal_residual),
+        qp_primal_residual=back(resid),
     )
     return out, QPWarmState(x=unflat(w2.x), z=unflat(w2.z), y=unflat(w2.y))
 

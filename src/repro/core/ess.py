@@ -125,6 +125,7 @@ def step(
     rack_power: jax.Array,
     dt: float,
     corrective_power: jax.Array | float = 0.0,
+    online: jax.Array | None = None,
 ) -> tuple[ESSState, jax.Array]:
     """Advance one sample: returns (new_state, grid_power_out).
 
@@ -137,14 +138,32 @@ def step(
     even if it issues an incorrect command").
     Saturation: if the battery cannot absorb/supply (SoC at a safe bound or
     power beyond p_max), the excess passes through to the grid.
+
+    ``online`` is a per-unit ESS availability *weight* in [0, 1] (degraded
+    mode): weight 0 passes the raw rack power straight to the grid
+    (p_batt = 0, SoC frozen) while the ramp filter keeps tracking the
+    rack so a recovering unit re-engages softly from g = rack_power;
+    fractional weights scale the delivered battery power (converter
+    wind-down/soft-start around a trip) with the SoC integrating the
+    scaled power.  ``online=None`` (or all ones) is bitwise identical to
+    the unmasked path, binary weights are bitwise identical to the legacy
+    boolean-mask semantics, and all of it matches the fused kernel
+    (``kernels.ref.pdu_sim`` with ``ess_on``) exactly.
     """
+    w = online
     alpha = 1.0 - jnp.exp(-p.beta * dt)
     g_new = state.g_filter + alpha * (rack_power - state.g_filter)
+    if w is not None:
+        g_new = jnp.where(w > 0, g_new, rack_power)
 
     # Battery power implied by the control law (+corrective charge).
     p_batt = g_new - rack_power + corrective_power
     # Power rating limit (paper Eq. 9 sizing makes this inactive if sized right).
     p_batt = jnp.clip(p_batt, -p.p_max, p.p_max)
+    if w is not None:
+        # Converter wind-down: deliver the weighted fraction (w = 1 is an
+        # exact multiply; w = 0 reproduces the hard passthrough bitwise).
+        p_batt = p_batt * w
 
     # Energy limit: can't charge past soc_safe_max or discharge below min.
     d_soc = soc_increment(p, p_batt, dt)
@@ -156,6 +175,8 @@ def step(
     shed_discharge = overshoot_lo * p.q_max * p.eta_d / dt
     p_batt = p_batt - shed_charge + shed_discharge
     new_soc = jnp.clip(new_soc, p.soc_safe_min, p.soc_safe_max)
+    if w is not None:
+        new_soc = jnp.where(w > 0, new_soc, state.soc)
 
     grid_power = rack_power + p_batt
     return ESSState(g_filter=g_new, soc=new_soc), grid_power
@@ -167,19 +188,28 @@ def simulate(
     rack_power: jax.Array,  # (T, ...) fraction of rated power
     dt: float,
     corrective_power: jax.Array | float = 0.0,  # scalar or (T, ...)
+    online: jax.Array | None = None,  # (...) or (T, ...) availability weight
 ) -> tuple[jax.Array, jax.Array, ESSState]:
     """Vectorized trace simulation.
 
+    ``online`` accepts a constant ``(...)`` weight or a per-sample
+    ``(T, ...)`` weight series (see ``step``).
     Returns (grid_power (T, ...), soc (T, ...), final_state).
     """
     corr = jnp.broadcast_to(jnp.asarray(corrective_power, jnp.float32), rack_power.shape)
+    per_sample = online is not None and jnp.ndim(online) == rack_power.ndim
 
     def body(s, inputs):
-        r_t, c_t = inputs
-        s2, g = step(p, s, r_t, dt, c_t)
+        if per_sample:
+            r_t, c_t, w_t = inputs
+            s2, g = step(p, s, r_t, dt, c_t, online=w_t)
+        else:
+            r_t, c_t = inputs
+            s2, g = step(p, s, r_t, dt, c_t, online=online)
         return s2, (g, s2.soc)
 
-    final, (g, soc) = jax.lax.scan(body, state, (rack_power, corr))
+    xs = (rack_power, corr, online) if per_sample else (rack_power, corr)
+    final, (g, soc) = jax.lax.scan(body, state, xs)
     return g, soc, final
 
 

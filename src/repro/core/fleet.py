@@ -56,10 +56,24 @@ def apply_failures(
     fail_times: jax.Array,  # (R,) sample index at which the rack drops to idle
     p_idle: float = 0.1,
 ) -> jax.Array:
-    """Racks drop to idle power at their failure time (-1 = never)."""
-    t_idx = jnp.arange(traces.shape[0])[:, None]
-    failed = (fail_times[None, :] >= 0) & (t_idx >= fail_times[None, :])
-    return jnp.where(failed, p_idle, traces)
+    """Racks drop to idle power at their failure time (-1 = never).
+
+    Compatibility shim: scripted rack power loss is first-class scenario
+    data now (``power.faults`` — attach a ``FaultSchedule`` to the scenario
+    and the renderer applies it chunk-bitwise).  This helper packs the old
+    fail-time vector into a single-episode schedule and stamps it onto an
+    already-materialized trace block; prefer ``scenario.attach_faults`` for
+    anything new.
+    """
+    from repro.power import faults as FLT
+
+    t, r = traces.shape
+    ft = np.asarray(fail_times)
+    sched = FLT.schedule_from_episodes(
+        r, rack=[(i, int(ft[i]), t) for i in range(r) if ft[i] >= 0],
+        p_fault=p_idle,
+    )
+    return jnp.where(FLT.rack_down(sched, 0, t), p_idle, traces)
 
 
 class FleetResult(NamedTuple):
@@ -70,8 +84,11 @@ class FleetResult(NamedTuple):
     report_grid: compliance.ComplianceReport
     # Per-rack wear report; when the config does not track health this is
     # the report of an empty history (zero cycles/fade, INFINITE projected
-    # lifetime — mind the inf if serializing).
+    # lifetime — serialize via ``health.fleet_summary(..., json_safe=True)``).
     health: hlt.HealthReport
+    # (n_ctrl,) fraction of ESS units online per control interval (ones
+    # unless the cfg runs degraded_mode with an availability mask).
+    ess_online_frac: jax.Array = None
 
 
 def condition_fleet(
@@ -82,6 +99,8 @@ def condition_fleet(
     soc0: float = 0.5,
     qp_iters: int = 60,
     use_plan: bool = True,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
 ) -> FleetResult:
     """Condition every rack with its own PDU; check campus compliance.
 
@@ -89,11 +108,27 @@ def condition_fleet(
     scans), so this is one fused XLA computation whatever R is.
     ``use_plan=False`` selects the per-rack build+factor controller path
     (the seed cold-start baseline used by benchmarks).
+
+    ``ess_online`` (requires ``cfg.degraded_mode``) is the per-interval ESS
+    availability mask — ``(n_ctrl, R)`` rows or one ``(R,)`` mask — with
+    the same semantics as ``pdu.condition``; ``ess_weight`` is the
+    optional per-sample ``(T, R)`` hardware availability weight
+    (``faults.ess_weight``).  NaN sensor-dropout samples in ``traces`` are
+    bridged before conditioning, so campus aggregates and compliance stay
+    finite under any fault schedule.
     """
-    r0 = traces[0]
+    r0 = traces[0]  # init_state bridges NaN (sensor-dark) entries itself
     state = pdu.init_state(cfg, r0, soc0=soc0)
-    grid, state_f, _ = pdu.condition(cfg, state, traces, qp_iters=qp_iters, use_plan=use_plan)
-    campus_rack = jnp.mean(traces, axis=1)
+    grid, state_f, telem = pdu.condition(
+        cfg, state, traces, qp_iters=qp_iters, use_plan=use_plan,
+        ess_online=ess_online, ess_weight=ess_weight,
+    )
+    if cfg.degraded_mode:
+        campus_rack = telem.rack_mean
+        on_frac = jnp.mean(telem.ess_online, axis=1)
+    else:
+        campus_rack = jnp.mean(traces, axis=1)
+        on_frac = jnp.ones(telem.soc.shape[0], jnp.float32)
     campus_grid = jnp.mean(grid, axis=1)
     return FleetResult(
         grid_traces=grid,
@@ -104,6 +139,7 @@ def condition_fleet(
         health=hlt.report(
             _health_params(cfg), cfg.ess_params, state_f.health, cfg.sample_dt
         ),
+        ess_online_frac=on_frac,
     )
 
 
@@ -126,6 +162,9 @@ class StreamingFleetResult(NamedTuple):
     # Per-rack wear report; an untracked config yields the empty-history
     # report (zero cycles/fade, INFINITE projected lifetime).
     health: hlt.HealthReport
+    # (n_ctrl,) fraction of ESS units online per control interval (ones
+    # unless the cfg runs degraded_mode under a fault schedule).
+    ess_online_frac: jax.Array = None
 
 
 class _Observers(NamedTuple):
@@ -176,6 +215,7 @@ class _CampusAccum(NamedTuple):
     soc_mean: jax.Array  # (n_chunks * chunk_intervals,)
     worst: jax.Array  # () running max QP primal residual
     health_trace: jax.Array  # (n_chunks, 3) fleet wear snapshot per chunk
+    ess_frac: jax.Array  # (n_chunks * chunk_intervals,) online fraction
     obs: _Observers  # streaming compliance state
 
 
@@ -244,11 +284,12 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
     """
 
     def build():
-        @functools.partial(jax.jit, donate_argnums=(0, 1))
-        def step(st, acc, tr, c_idx):
+        def step_impl(st, acc, tr, c_idx, on, wt):
             if mesh is not None:
                 tr = shard_racks_in_jit(tr, mesh, rack_axis)
-            st2, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+            st2, ch = pdu.condition_campus(
+                cfg, st, tr, qp_iters=qp_iters, ess_online=on, ess_weight=wt
+            )
             acc2 = _CampusAccum(
                 campus_rack=jax.lax.dynamic_update_slice(
                     acc.campus_rack, ch.campus_rack, (c_idx * chunk,)
@@ -263,9 +304,23 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
                 health_trace=jax.lax.dynamic_update_slice(
                     acc.health_trace, ch.health[None], (c_idx, 0)
                 ),
+                ess_frac=jax.lax.dynamic_update_slice(
+                    acc.ess_frac, ch.ess_online_frac, (c_idx * n_int,)
+                ),
                 obs=_observers_update(acc.obs, bank, ch, cfg.sample_dt),
             )
             return st2, acc2
+
+        if cfg.degraded_mode:
+            # Degraded variant carries the chunk's availability-mask rows
+            # and (optionally) the per-sample hardware weight block.
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
+            def step(st, acc, tr, c_idx, on, wt):
+                return step_impl(st, acc, tr, c_idx, on, wt)
+        else:
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
+            def step(st, acc, tr, c_idx):
+                return step_impl(st, acc, tr, c_idx, None, None)
 
         return step
 
@@ -278,7 +333,7 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
 
 def _finish_streaming(
     cfg, grid_spec, state, campus_rack, campus_grid, soc_mean, worst,
-    bank, obs, health_trace,
+    bank, obs, health_trace, ess_frac=None,
 ):
     """Assemble the result from streaming state: the compliance reports
     come from the cross-chunk observers (exact ramp, Goertzel spec lines),
@@ -300,6 +355,7 @@ def _finish_streaming(
         health=hlt.report(
             _health_params(cfg), cfg.ess_params, state.health, cfg.sample_dt
         ),
+        ess_online_frac=ess_frac,
     )
 
 
@@ -315,6 +371,8 @@ def condition_fleet_streaming(
     mesh: jax.sharding.Mesh | None = None,
     rack_axis: str = "data",
     state: pdu.PDUState | None = None,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
 ) -> StreamingFleetResult:
     """Campus-scale conditioning in time chunks with bounded working set.
 
@@ -345,6 +403,14 @@ def condition_fleet_streaming(
     controller-interval boundary, which every full chunk is.  A
     caller-supplied ``state`` is copied before the (donated) step consumes
     it, so the same checkpoint can seed several continuations.
+
+    ``ess_online`` (requires ``cfg.degraded_mode``) is the ESS availability
+    mask for the *whole* stream — ``(n_ctrl_total, R)`` per-interval rows
+    (sliced per chunk) or one ``(R,)`` mask applied throughout; semantics
+    as in ``pdu.condition``.  ``ess_weight`` is the optional per-sample
+    ``(T, R)`` hardware availability weight for the whole stream (sliced
+    per chunk by sample).  ``condition_scenario_streaming`` derives both
+    from the scenario's attached fault schedule automatically.
     """
     k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
     n_int = max(int(chunk_intervals), 1)
@@ -357,6 +423,16 @@ def condition_fleet_streaming(
         provider, t_total = (lambda t0, n: traces[t0 : t0 + n]), traces.shape[0]
     n_chunks = -(-t_total // chunk)
     n_ctrl = -(-t_total // k)
+    if ess_online is not None or ess_weight is not None:
+        if not cfg.degraded_mode:
+            raise ValueError(
+                "ess_online/ess_weight require a degraded-mode config "
+                "(make_pdu(..., degraded_mode=True))"
+            )
+        if ess_online is not None:
+            ess_online = jnp.asarray(ess_online, jnp.float32)
+        if ess_weight is not None:
+            ess_weight = jnp.asarray(ess_weight, jnp.float32)
 
     if state is None:
         state = pdu.init_state(cfg, provider(0, 1)[0], soc0=soc0)
@@ -373,6 +449,7 @@ def condition_fleet_streaming(
         soc_mean=jnp.zeros((n_chunks * n_int,), jnp.float32),
         worst=jnp.zeros((), jnp.float32),
         health_trace=jnp.zeros((n_chunks, 3), jnp.float32),
+        ess_frac=jnp.ones((n_chunks * n_int,), jnp.float32),
         obs=_observers_init(bank),
     )
     for c_idx, t0 in enumerate(range(0, t_total, chunk)):
@@ -382,20 +459,32 @@ def condition_fleet_streaming(
         # whole-trace call would, so the carried state / soc_mean /
         # max_qp_residual never see whole pad intervals and stay
         # chunk-size invariant (and scanned-engine identical).
-        tr = provider(t0, min(chunk, t_total - t0))
+        n = min(chunk, t_total - t0)
+        tr = provider(t0, n)
         if mesh is not None and not isinstance(tr, jax.Array):
             tr = shard_racks(tr, mesh, rack_axis)  # host-resident input
-        state, acc = step(state, acc, tr, jnp.asarray(c_idx, jnp.int32))
+        if cfg.degraded_mode:
+            if ess_online is None or ess_online.ndim < 2:
+                on = ess_online  # one mask (or None) for the whole stream
+            else:
+                on = ess_online[c_idx * n_int : c_idx * n_int + -(-n // k)]
+            # The hardware weight is per *sample*, so it slices by samples.
+            wt = None if ess_weight is None else ess_weight[t0 : t0 + n]
+            state, acc = step(
+                state, acc, tr, jnp.asarray(c_idx, jnp.int32), on, wt
+            )
+        else:
+            state, acc = step(state, acc, tr, jnp.asarray(c_idx, jnp.int32))
 
     return _finish_streaming(
         cfg, grid_spec, state,
         acc.campus_rack[:t_total], acc.campus_grid[:t_total],
         acc.soc_mean[:n_ctrl], acc.worst,
-        bank, acc.obs, acc.health_trace,
+        bank, acc.obs, acc.health_trace, acc.ess_frac[:n_ctrl],
     )
 
 
-def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
+def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank):
     """Cached jitted scanned engine: the whole trace in ONE dispatch.
 
     ``jax.lax.scan`` walks the chunk index over the ``n_full`` full chunks;
@@ -413,7 +502,16 @@ def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
     every scenario with the same structure and rack count — and every
     resume point with the same remaining chunk geometry (e.g. fixed-size
     windows of a long stream).
+
+    With a fault schedule attached to the scenario (and a degraded-mode
+    config), the per-interval ESS availability mask is derived *inside* the
+    jit from the schedule's episode table (``faults.interval_online`` is
+    pure in the absolute sample index, like the renderer), so the mask is
+    chunk- and resume-invariant by construction.  ``scen.faults is None``
+    vs a schedule changes the scenario treedef, which retraces the cached
+    jit automatically — no extra cache key needed.
     """
+    from repro.power import faults as FLT
     from repro.power import scenario as SC
 
     def prep(tr):
@@ -427,11 +525,32 @@ def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
         @functools.partial(jax.jit, donate_argnums=(1,))
         def run(scen, st, start):
             obs = _observers_init(bank)
+            # Trace-time structural check: retraced automatically when the
+            # scenario gains/loses a fault schedule (treedef change).
+            faulty = cfg.degraded_mode and scen.faults is not None
+
+            def mask(t0, n_int):
+                if not faulty:
+                    return None
+                return FLT.interval_online(scen.faults, t0, n_int, k)
+
+            def wt(t0, n_smp):
+                # Per-sample hardware availability (converter wind-down over
+                # the scenario's edge window) — pure in the absolute sample
+                # index like the renderer, so chunk/resume invariant.
+                if not faulty:
+                    return None
+                return FLT.ess_weight(scen.faults, t0, n_smp, scen.edge_width)
 
             def body(carry, c_idx):
                 st, obs = carry
-                tr = prep(SC.render(scen, start + c_idx * chunk, chunk))
-                st2, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+                t0 = start + c_idx * chunk
+                tr = prep(SC.render(scen, t0, chunk))
+                st2, ch = pdu.condition_campus(
+                    cfg, st, tr, qp_iters=qp_iters,
+                    ess_online=mask(t0, chunk // k),
+                    ess_weight=wt(t0, chunk),
+                )
                 obs2 = _observers_update(obs, bank, ch, cfg.sample_dt)
                 return (st2, obs2), ch
 
@@ -445,12 +564,18 @@ def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
                 parts.append(pdu.CampusChunk(
                     ch.campus_rack.reshape(-1), ch.campus_grid.reshape(-1),
                     ch.soc_mean.reshape(-1), None, None,
+                    ch.ess_online_frac.reshape(-1),
                 ))
                 worst.append(jnp.max(ch.max_qp_residual))
                 htrace.append(ch.health)  # (n_full, 3)
             if rem:
-                tr = prep(SC.render(scen, start + n_full * chunk, rem))
-                st, ch = pdu.condition_campus(cfg, st, tr, qp_iters=qp_iters)
+                t0 = start + n_full * chunk
+                tr = prep(SC.render(scen, t0, rem))
+                st, ch = pdu.condition_campus(
+                    cfg, st, tr, qp_iters=qp_iters,
+                    ess_online=mask(t0, -(-rem // k)),
+                    ess_weight=wt(t0, rem),
+                )
                 obs = _observers_update(obs, bank, ch, cfg.sample_dt)
                 parts.append(ch)
                 worst.append(ch.max_qp_residual)
@@ -462,12 +587,13 @@ def _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank):
                 soc_mean=cat([p.soc_mean for p in parts]),
                 max_qp_residual=functools.reduce(jnp.maximum, worst),
                 health=cat(htrace),
+                ess_online_frac=cat([p.ess_online_frac for p in parts]),
             ), obs
 
         return run
 
     return _cached_engine(
-        _engine_key(cfg, "scanned", qp_iters, chunk, n_full, rem,
+        _engine_key(cfg, "scanned", qp_iters, chunk, k, n_full, rem,
                     mesh, rack_axis, bank),
         build,
     )
@@ -514,6 +640,7 @@ def condition_scenario_scanned(
     from repro.power import scenario as SC
 
     _check_scenario_rate(scenario, cfg)
+    _check_scenario_faults(scenario, cfg)
     k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
     chunk = max(int(chunk_intervals), 1) * k
     start = int(start_sample)
@@ -549,13 +676,15 @@ def condition_scenario_scanned(
         state = jax.tree_util.tree_map(jnp.copy, state)
 
     bank = _make_bank(grid_spec, cfg, t_total)
-    run = _scanned_engine(cfg, qp_iters, chunk, n_full, rem, mesh, rack_axis, bank)
+    run = _scanned_engine(
+        cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank
+    )
     state_f, ch, obs = run(scenario, state, jnp.asarray(start, jnp.int32))
     return _finish_streaming(
         cfg, grid_spec, state_f,
         ch.campus_rack[:t_total], ch.campus_grid[:t_total],
         ch.soc_mean[:n_ctrl], ch.max_qp_residual,
-        bank, obs, ch.health,
+        bank, obs, ch.health, ch.ess_online_frac[:n_ctrl],
     )
 
 
@@ -564,6 +693,16 @@ def _check_scenario_rate(scenario, cfg: pdu.PDUConfig) -> None:
         raise ValueError(
             f"scenario sample rate {scenario.sample_hz} Hz != PDU sample_dt "
             f"{cfg.sample_dt} s; build the PDU with sample_dt=1/sample_hz"
+        )
+
+
+def _check_scenario_faults(scenario, cfg: pdu.PDUConfig) -> None:
+    if getattr(scenario, "faults", None) is not None and not cfg.degraded_mode:
+        raise ValueError(
+            "the scenario has a fault schedule attached; conditioning it "
+            "requires a degraded-mode config (make_pdu(..., "
+            "degraded_mode=True)) so ESS trips are masked and sensor-dropout "
+            "NaN samples are bridged instead of poisoning the state"
         )
 
 
@@ -594,6 +733,25 @@ def condition_scenario_streaming(
     if engine != "host":
         raise ValueError(f"unknown engine {engine!r} (expected 'scanned' or 'host')")
     _check_scenario_rate(scenario, cfg)
+    _check_scenario_faults(scenario, cfg)
+    if cfg.degraded_mode and getattr(scenario, "faults", None) is not None:
+        # The host engine takes the availability mask as data: precompute
+        # the full per-interval rows from the schedule (same pure function
+        # the scanned engine evaluates in-jit, so the two stay bitwise
+        # identical under any fault schedule).
+        from repro.power import faults as FLT
+
+        k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
+        n_ctrl = -(-scenario.total_samples // k)
+        kwargs.setdefault(
+            "ess_online", FLT.interval_online(scenario.faults, 0, n_ctrl, k)
+        )
+        kwargs.setdefault(
+            "ess_weight",
+            FLT.ess_weight(
+                scenario.faults, 0, scenario.total_samples, scenario.edge_width
+            ),
+        )
     return condition_fleet_streaming(
         cfg,
         SC.chunk_provider(scenario),

@@ -333,12 +333,23 @@ def report(
     )
 
 
-def fleet_summary(rep: HealthReport) -> dict:
-    """Campus-level headline numbers from a per-rack report (host floats)."""
+def fleet_summary(rep: HealthReport, *, json_safe: bool = False) -> dict:
+    """Campus-level headline numbers from a per-rack report (host floats).
+
+    An empty wear history projects an INFINITE lifetime, and ``float('inf')``
+    is not valid JSON — ``json.dumps`` emits the non-standard ``Infinity``
+    literal that strict parsers (and most log pipelines) reject.  With
+    ``json_safe=True`` every non-finite value is clamped to ``None`` (JSON
+    null), so the summary always survives
+    ``json.dumps(..., allow_nan=False)`` — the operator service's audit log
+    writes it this way.
+    """
+    import math
+
     import numpy as np
 
     a = lambda x: np.asarray(x)
-    return {
+    out = {
         "efc_mean": float(a(rep.efc).mean()),
         "efc_max": float(a(rep.efc).max()),
         "half_cycles_mean": float(a(rep.half_cycles).mean()),
@@ -350,6 +361,9 @@ def fleet_summary(rep: HealthReport) -> dict:
         ),
         "mean_soc": float(a(rep.mean_soc).mean()),
     }
+    if json_safe:
+        out = {k: (v if math.isfinite(v) else None) for k, v in out.items()}
+    return out
 
 
 def chunk_aggregates(p: HealthParams, state: HealthState, dt: float) -> jax.Array:

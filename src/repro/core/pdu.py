@@ -40,6 +40,12 @@ class PDUConfig:
     # conditioning scan.  Pure observation — grid/SoC outputs are
     # unchanged — but it costs a second per-sample scan, so it is opt-in.
     track_health: bool = static_field(default=False)
+    # Degraded-mode conditioning: honor per-interval ESS availability masks
+    # (offline units run in LC passthrough), bridge NaN sensor dropouts
+    # with a last-good-sample hold, and trip measurement-blind racks into
+    # passthrough.  Static so the fault-free path stays structurally (and
+    # bitwise) identical to builds without this feature.
+    degraded_mode: bool = static_field(default=False)
 
 
 def per_unit_filter(s: sizing.SizingResult, rack: sizing.RackRating) -> filters.LCFilterParams:
@@ -63,6 +69,7 @@ def make_pdu(
     controller_cfg: ctrl.ControllerConfig | None = None,
     health_params: hlt.HealthParams | None = None,
     track_health: bool = False,
+    degraded_mode: bool = False,
 ) -> PDUConfig:
     """Size and assemble an EasyRider PDU for a rack + grid spec.
 
@@ -104,6 +111,7 @@ def make_pdu(
         sample_dt=sample_dt,
         software_enabled=software_enabled,
         track_health=track_health,
+        degraded_mode=degraded_mode,
     )
 
 
@@ -117,12 +125,25 @@ class PDUState(NamedTuple):
     soc_ema: jax.Array  # BMS measurement filter (slow SoC estimate)
     qp_warm: ctrl.QPWarmState  # ADMM iterates carried across intervals/chunks
     health: hlt.HealthState  # battery wear telemetry (zeros unless tracked)
+    # Degraded-mode state (always present so the carry structure is uniform):
+    # operator/manual ESS availability override (1 = available) and the last
+    # finite sample seen per rack (seeds the sensor-dropout bridge).
+    ess_online: jax.Array = None
+    last_good: jax.Array = None
 
 
 def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDUState:
-    """Steady-state initialization at a constant starting power."""
+    """Steady-state initialization at a constant starting power.
+
+    NaN entries in ``rack_power0`` (a rack whose sensor is dark at the very
+    first sample) seed from the fleet's finite mean instead — a no-op for
+    clean traces, and it keeps every engine's seeding identical under
+    sensor-dropout fault schedules.
+    """
     filt = filters.make_discrete_filter(cfg.filter_params, cfg.sample_dt)
     r0 = jnp.asarray(rack_power0, jnp.float32)
+    finite = jnp.isfinite(r0)
+    r0 = jnp.where(finite, r0, jnp.nan_to_num(jnp.nanmean(r0), nan=0.5))
     u0 = jnp.stack([jnp.ones_like(r0), r0], axis=-1)  # [v_in=1, i_load=r0]
     x0 = jnp.vectorize(lambda u: filters.steady_state(filt, u), signature="(m)->(n)")(u0)
     return PDUState(
@@ -135,6 +156,10 @@ def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDU
         soc_ema=jnp.full_like(r0, soc0),
         qp_warm=ctrl.init_warm(cfg.controller.horizon, r0.shape),
         health=hlt.init_state(jnp.full_like(r0, soc0)),
+        ess_online=jnp.ones_like(r0),
+        # Distinct buffer from ess_state.g_filter: donated engines reject
+        # the same array appearing twice in one argument list.
+        last_good=jnp.copy(r0),
     )
 
 
@@ -143,6 +168,34 @@ class Telemetry(NamedTuple):
     command: jax.Array  # corrective power commanded per interval
     target: jax.Array  # outer-loop SoC target per interval
     qp_residual: jax.Array  # QP primal residual per interval (0 if sw off)
+    # Degraded-mode extras (None unless cfg.degraded_mode):
+    rack_mean: jax.Array = None  # (T,) per-sample mean of the *bridged* trace
+    ess_online: jax.Array = None  # (n_ctrl, ...) effective availability mask
+
+
+def bridge_sensors(
+    last_good: jax.Array, rack_power: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Replace NaN (sensor-dropout) samples with the most recent finite
+    sample per rack — ``last_good`` seeds racks whose first samples are
+    dark.  Returns ``(bridged, new_last_good)``.
+
+    The fill is a pure gather of the last finite sample at-or-before each
+    index, so chunked bridging with the carried ``last_good`` reproduces
+    whole-trace bridging bit-for-bit.
+    """
+    t = rack_power.shape[0]
+    finite = jnp.isfinite(rack_power)
+    idx = jnp.arange(t, dtype=jnp.int32).reshape((t,) + (1,) * (rack_power.ndim - 1))
+    last_pos = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(finite, idx, -1), axis=0
+    )
+    vals = jnp.where(finite, rack_power, 0.0)
+    held = jnp.take_along_axis(
+        vals, jnp.broadcast_to(jnp.maximum(last_pos, 0), rack_power.shape), axis=0
+    )
+    bridged = jnp.where(last_pos >= 0, held, last_good)
+    return bridged, bridged[-1]
 
 
 def condition(
@@ -153,6 +206,8 @@ def condition(
     idle_remaining_s: jax.Array | float = 0.0,
     qp_iters: int = 120,
     use_plan: bool = True,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
 ) -> tuple[jax.Array, PDUState, Telemetry]:
     """Condition a trace chunk; carries state across calls (streaming).
 
@@ -173,12 +228,84 @@ def condition(
     whole-trace call.  ``use_plan=False`` keeps the original per-interval
     build + factor + vmapped-solve path (the oracle for equivalence tests
     and the cold-start baseline for benchmarks).
+
+    Degraded mode (``cfg.degraded_mode``): ``ess_online`` is a per-interval
+    availability mask — ``(n_ctrl, ...)`` rows, or a single ``(...)`` mask
+    applied to every interval — marking racks whose ESS unit has tripped
+    offline; those racks condition in LC passthrough with zeroed controller
+    commands and reset QP warm state.  NaN samples (sensor dropout) are
+    bridged with a last-good-sample hold (``bridge_sensors``, seeded from
+    ``state.last_good``), and a rack whose sensor is dark for an *entire*
+    control interval trips a finite-guard: it is forced into passthrough
+    for that interval regardless of the mask, so a blind controller never
+    commands a live battery.  The effective mask actually applied and the
+    per-sample mean of the bridged trace ride out in ``Telemetry``.
+
+    ``ess_weight`` (optional, shaped like ``rack_power``) is the hardware
+    plane's *per-sample* availability weight: trips land at their true
+    sample and the converter winds down/soft-starts over the schedule's
+    edge window (``faults.ess_weight``) instead of snapping at the
+    controller-interval boundary — without it, every trip in an interval
+    hands its battery power to the grid on the same sample, a fabricated
+    campus-synchronized step.  When given, the hardware path follows
+    ``ess_weight`` (composed with the manual-override state and the
+    finite-guard) while ``ess_online`` keeps governing the software plane
+    (QP admission, command zeroing, telemetry).
     """
+    degraded = cfg.degraded_mode
+    if (ess_online is not None or ess_weight is not None) and not degraded:
+        raise ValueError(
+            "ess_online/ess_weight require a cfg with degraded_mode=True"
+        )
     dt = cfg.sample_dt
     k = max(int(round(float(cfg.controller.dt) / dt)), 1)
     t = rack_power.shape[0]
     n_ctrl = -(-t // k)
     pad = n_ctrl * k - t
+    batch = rack_power.shape[1:]
+
+    if degraded:
+        finite = jnp.isfinite(rack_power)
+        fpad = (
+            jnp.concatenate([finite, jnp.repeat(finite[-1:], pad, axis=0)], axis=0)
+            if pad
+            else finite
+        )
+        # Finite-guard tripwire: an interval with zero finite samples means
+        # the rack was measurement-blind for the whole control period.
+        sensed = jnp.any(fpad.reshape((n_ctrl, k) + batch), axis=1)
+        rack_power, last_good2 = bridge_sensors(state.last_good, rack_power)
+        if ess_online is None:
+            arg_rows = jnp.ones((n_ctrl,) + batch, jnp.float32)
+        else:
+            ess_online = jnp.asarray(ess_online, jnp.float32)
+            if ess_online.ndim == rack_power.ndim - 1:  # one mask, all intervals
+                ess_online = jnp.broadcast_to(ess_online, (n_ctrl,) + batch)
+            arg_rows = ess_online
+        # Manual-override state x finite-guard: applies to both planes.
+        hw_base = jnp.broadcast_to(
+            state.ess_online, (n_ctrl,) + batch
+        ) * sensed.astype(jnp.float32)
+        on_rows = arg_rows * hw_base
+        if ess_weight is None:
+            # Hardware follows the interval mask (legacy/manual path).
+            hw_chunks = on_rows[:, None]
+        else:
+            ess_weight = jnp.asarray(ess_weight, jnp.float32)
+            wpad = (
+                jnp.concatenate(
+                    [ess_weight, jnp.repeat(ess_weight[-1:], pad, axis=0)],
+                    axis=0,
+                )
+                if pad
+                else ess_weight
+            )
+            hw_chunks = (
+                wpad.reshape((n_ctrl, k) + batch) * hw_base[:, None]
+            )
+    else:
+        last_good2 = state.last_good
+
     padded = (
         jnp.concatenate([rack_power, jnp.repeat(rack_power[-1:], pad, axis=0)], axis=0)
         if pad
@@ -205,11 +332,15 @@ def condition(
     )
     hconsts = hlt.step_consts(cfg.health) if cfg.track_health else None
 
-    def interval(carry, rack_chunk):
+    def interval(carry, xs):
         (
             x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, hstate,
             step_idx,
         ) = carry
+        if degraded:
+            rack_chunk, on_row, hw_chunk = xs
+        else:
+            rack_chunk = xs
 
         # --- hardware path: fused ESS + SoC + LC simulation --------------
         # (single pass; Pallas kernel on TPU, fused scan elsewhere —
@@ -220,8 +351,13 @@ def condition(
         rc = rack_chunk if batched else rack_chunk[:, None]
         cp = corr_profile if batched else corr_profile[:, None]
         g0, s0, xf0 = lift(es.g_filter), lift(es.soc), lift(x_f)
+        if degraded:
+            hw = jnp.broadcast_to(hw_chunk, (k,) + batch)
+            mask_kw = dict(ess_on=hw if batched else hw[:, None])
+        else:
+            mask_kw = {}
         grid, soc_path, (g_f, soc_f, x_new) = ops.pdu_sim(
-            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp, **hw_kw
+            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp, **mask_kw, **hw_kw
         )
         if not batched:
             grid, g_f, soc_f, x_new = grid[:, 0], g_f[0], soc_f[0], x_new[0]
@@ -267,6 +403,7 @@ def condition(
             out, warm2 = ctrl.inner_loop_step_plan(
                 cfg.controller, cfg.ess_params, plan, soc_meas, s_target,
                 u_prev, warm, qp_iters=qp_iters,
+                active=on_row if degraded else None,
             )
             new_cmd = out.corrective_power
             resid = out.qp_primal_residual
@@ -278,6 +415,9 @@ def condition(
                 soc_meas, jnp.broadcast_to(u_prev, soc_meas.shape),
                 jnp.broadcast_to(s_target, soc_meas.shape),
             )
+            if degraded:
+                new_cmd = jnp.where(on_row > 0, new_cmd, 0.0)
+                resid = jnp.where(on_row > 0, resid, 0.0)
             warm2 = warm
         else:
             new_cmd = jnp.zeros_like(soc_meas)
@@ -288,6 +428,10 @@ def condition(
         telem = (
             es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape), resid,
         )
+        if degraded:
+            # Campus mean of the *bridged* trace (NaN never reaches campus
+            # aggregates) and the mask actually applied this interval.
+            telem = telem + (jnp.mean(rc, axis=1), on_row)
         carry2 = (
             x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
             warm2, hstate2, step_idx + 1,
@@ -302,15 +446,24 @@ def condition(
     (
         (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, h_f, _),
         (grid_chunks, telem),
-    ) = jax.lax.scan(interval, carry0, chunks)
+    ) = jax.lax.scan(
+        interval, carry0, (chunks, on_rows, hw_chunks) if degraded else chunks
+    )
     grid = grid_chunks.reshape((n_ctrl * k,) + rack_power.shape[1:])[:t]
     new_state = PDUState(
         filter_state=x_f, filter_obj=filt, ess_state=es_f, u_prev=u_prev,
         cmd_applied=cmd_applied, cmd_target=cmd_target, soc_ema=soc_ema,
         qp_warm=warm_f, health=h_f,
+        ess_online=state.ess_online, last_good=last_good2,
     )
+    extra = {}
+    if degraded:
+        extra = dict(
+            rack_mean=telem[4].reshape((n_ctrl * k,))[:t], ess_online=telem[5]
+        )
     return grid, new_state, Telemetry(
-        soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3]
+        soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3],
+        **extra,
     )
 
 
@@ -322,6 +475,11 @@ class CampusChunk(NamedTuple):
     soc_mean: jax.Array  # (n_ctrl,) fleet-mean SoC per control interval
     max_qp_residual: jax.Array  # () worst QP primal residual in the chunk
     health: jax.Array  # (3,) [mean EFC, max fade, max DoD] at chunk end
+    # Fraction of ESS units online per control interval (ones unless the
+    # cfg runs degraded_mode) — the honest ramp-budget denominator: a
+    # campus passing spec with 30% of units dark is a different claim than
+    # one passing at full strength, and this is where that shows.
+    ess_online_frac: jax.Array = None
 
 
 def condition_campus(
@@ -331,6 +489,8 @@ def condition_campus(
     *,
     qp_iters: int = 30,
     use_plan: bool = True,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
 ) -> tuple[PDUState, CampusChunk]:
     """One streaming-campus step: condition a chunk, reduce to aggregates.
 
@@ -343,17 +503,29 @@ def condition_campus(
     the chunk's end (zeros unless ``cfg.track_health``) — the online
     telemetry a campus operator would chart.
     """
-    grid, state2, telem = condition(cfg, state, rack_power, qp_iters=qp_iters, use_plan=use_plan)
+    grid, state2, telem = condition(
+        cfg, state, rack_power, qp_iters=qp_iters, use_plan=use_plan,
+        ess_online=ess_online, ess_weight=ess_weight,
+    )
     if cfg.track_health:
         hsnap = hlt.chunk_aggregates(cfg.health, state2.health, cfg.sample_dt)
     else:
         hsnap = jnp.zeros((3,), jnp.float32)
+    if cfg.degraded_mode:
+        # The raw chunk may carry NaN sensor dropouts; the bridged mean
+        # from the conditioning scan is the honest campus-load signal.
+        campus_rack = telem.rack_mean
+        on_frac = jnp.mean(telem.ess_online, axis=1)
+    else:
+        campus_rack = jnp.mean(rack_power, axis=1)
+        on_frac = jnp.ones(telem.soc.shape[0], jnp.float32)
     return state2, CampusChunk(
-        campus_rack=jnp.mean(rack_power, axis=1),
+        campus_rack=campus_rack,
         campus_grid=jnp.mean(grid, axis=1),
         soc_mean=jnp.mean(telem.soc, axis=1),
         max_qp_residual=jnp.max(telem.qp_residual),
         health=hsnap,
+        ess_online_frac=on_frac,
     )
 
 

@@ -25,8 +25,7 @@ from repro.kernels.pallas_compat import CompilerParams
 
 
 def _pdu_kernel(
-    ad_ref, bd_ref, c_ref, s0_ref, r_ref, corr_ref, grid_ref, soc_ref, sf_ref, state,
-    *,
+    *refs,
     block_t: int,
     t_total: int,
     alpha: float,
@@ -37,7 +36,17 @@ def _pdu_kernel(
     p_max: float,
     soc_min: float,
     soc_max: float,
+    masked: bool,
+    mask_2d: bool = False,
 ):
+    if masked:
+        (ad_ref, bd_ref, c_ref, s0_ref, r_ref, corr_ref, on_ref,
+         grid_ref, soc_ref, sf_ref, state) = refs
+        w_row = None if mask_2d else on_ref[0, :]
+    else:
+        (ad_ref, bd_ref, c_ref, s0_ref, r_ref, corr_ref,
+         grid_ref, soc_ref, sf_ref, state) = refs
+
     @pl.when(pl.program_id(0) == 0)
     def _init():
         state[...] = s0_ref[...]
@@ -52,9 +61,18 @@ def _pdu_kernel(
         g, soc, x0, x1, x2 = s[0], s[1], s[2], s[3], s[4]
         r_t = r_ref[t, :]
         c_t = corr_ref[t, :]
+        if masked:
+            w_t = on_ref[t, :] if mask_2d else w_row
         # --- ESS ramp control (paper Eq. 2, exact ZOH) --------------------
         g_new = g + alpha * (r_t - g)
+        if masked:
+            # Offline units track the rack (soft re-engage on recovery).
+            g_new = jnp.where(w_t > 0, g_new, r_t)
         p_batt = jnp.clip(g_new - r_t + c_t, -p_max, p_max)
+        if masked:
+            # Converter wind-down: deliver the weighted fraction (w = 1 is
+            # an exact multiply; w = 0 is the hard passthrough, bitwise).
+            p_batt = p_batt * w_t
         # --- SoC integration with efficiency asymmetry (Eq. 14) -----------
         charge = jnp.maximum(p_batt, 0.0)
         discharge = jnp.maximum(-p_batt, 0.0)
@@ -63,6 +81,9 @@ def _pdu_kernel(
         over_lo = jnp.maximum(soc_min - soc_new, 0.0)
         p_batt = p_batt - over_hi * q_max / (eta_c * dt) + over_lo * q_max * eta_d / dt
         soc_new = jnp.clip(soc_new, soc_min, soc_max)
+        if masked:
+            # LC passthrough: SoC frozen while the unit is dark.
+            soc_new = jnp.where(w_t > 0, soc_new, soc)
         node = r_t + p_batt
         # --- LC filter (grid current out, state update) --------------------
         grid_ref[t, :] = (c[0, 0] * x0 + c[0, 1] * x1 + c[0, 2] * x2).astype(
@@ -105,11 +126,19 @@ def pdu_sim(
     soc_max: float,
     block_t: int = 512,
     interpret: bool = False,
+    ess_on: jax.Array | None = None,  # (R,) or (T, R) availability weight
 ) -> tuple[jax.Array, jax.Array, tuple[jax.Array, jax.Array, jax.Array]]:
-    """Fused hardware-path sim.  Returns (grid (T,R), soc (T,R), finals)."""
+    """Fused hardware-path sim.  Returns (grid (T,R), soc (T,R), finals).
+
+    ``ess_on`` (degraded mode) is an availability weight in [0, 1] — a
+    ``(R,)`` row or a ``(T, R)`` per-sample series — see ``ref.pdu_sim``
+    for the exact semantics; both paths match bitwise.
+    """
     import math
 
     t, r = rack_power.shape
+    masked = ess_on is not None
+    mask_2d = masked and ess_on.ndim == 2
     block_t = min(block_t, t)
     pad_t = -t % block_t
     rp = rack_power.astype(jnp.float32)
@@ -124,22 +153,40 @@ def pdu_sim(
     )  # (5, R)
     grid = ((t + pad_t) // block_t,)
     alpha = 1.0 - math.exp(-beta * dt)
+    in_specs = [
+        pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        pl.BlockSpec((3, 2), lambda i: (0, 0)),
+        pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        pl.BlockSpec((5, r), lambda i: (0, 0)),
+        pl.BlockSpec((block_t, r), lambda i: (i, 0)),
+        pl.BlockSpec((block_t, r), lambda i: (i, 0)),
+    ]
+    operands = [
+        ad.astype(jnp.float32),
+        bd.astype(jnp.float32),
+        c_row.reshape(1, 3).astype(jnp.float32),
+        s0,
+        rp,
+        cp,
+    ]
+    if mask_2d:
+        wp = ess_on.astype(jnp.float32)
+        if pad_t:
+            wp = jnp.concatenate([wp, jnp.tile(wp[-1:], (pad_t, 1))], axis=0)
+        in_specs.append(pl.BlockSpec((block_t, r), lambda i: (i, 0)))
+        operands.append(wp)
+    elif masked:
+        in_specs.append(pl.BlockSpec((1, r), lambda i: (0, 0)))
+        operands.append(ess_on.reshape(1, r).astype(jnp.float32))
     y, soc_t, sf = pl.pallas_call(
         functools.partial(
             _pdu_kernel,
             block_t=block_t, t_total=t, alpha=alpha, dt=dt, q_max=q_max,
             eta_c=eta_c, eta_d=eta_d, p_max=p_max, soc_min=soc_min,
-            soc_max=soc_max,
+            soc_max=soc_max, masked=masked, mask_2d=mask_2d,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((3, 3), lambda i: (0, 0)),
-            pl.BlockSpec((3, 2), lambda i: (0, 0)),
-            pl.BlockSpec((1, 3), lambda i: (0, 0)),
-            pl.BlockSpec((5, r), lambda i: (0, 0)),
-            pl.BlockSpec((block_t, r), lambda i: (i, 0)),
-            pl.BlockSpec((block_t, r), lambda i: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_t, r), lambda i: (i, 0)),
             pl.BlockSpec((block_t, r), lambda i: (i, 0)),
@@ -153,13 +200,6 @@ def pdu_sim(
         scratch_shapes=[pltpu.VMEM((5, r), jnp.float32)],
         compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
-    )(
-        ad.astype(jnp.float32),
-        bd.astype(jnp.float32),
-        c_row.reshape(1, 3).astype(jnp.float32),
-        s0,
-        rp,
-        cp,
-    )
+    )(*operands)
     g_f, soc_f, x_f = sf[0], sf[1], sf[2:5].T
     return y[:t], soc_t[:t], (g_f, soc_f, x_f)

@@ -1,5 +1,5 @@
 """Workload power modeling: device states, phase timelines, scenario engine,
-trace synthesis."""
-from repro.power import device, phases, scenario, trace
+fault engine, trace synthesis."""
+from repro.power import device, faults, phases, scenario, trace
 
-__all__ = ["device", "phases", "scenario", "trace"]
+__all__ = ["device", "faults", "phases", "scenario", "trace"]

@@ -1,0 +1,464 @@
+"""Stochastic fault/repair processes as first-class scenario data.
+
+The paper evaluates EasyRider against one scripted fault cascade (Fig. 13);
+production racks fail continuously and asynchronously — PDUs brown out,
+ESS units trip offline, sensors drop samples — and exactly these
+uncoordinated partial-fleet events excite the grid-side oscillation modes
+operators fear most (PAPERS.md, "Wide-Area Power System Oscillations from
+Large-Scale AI Workloads").  This module compiles per-rack alternating
+renewal processes into a **struct-of-arrays fault schedule**:
+
+  * geometric up/down durations drawn once at construction time with
+    counter-based ``random.fold_in`` keys (same determinism discipline as
+    the scenario noise path: channel and rack index are folded into the
+    key, so a schedule is a pure function of ``(seed, rates, geometry)``);
+  * three independent channels per rack — **rack power loss** (the rack
+    drops to ``p_fault``), **ESS-unit trips** (the battery branch goes
+    offline and the PDU falls back to LC passthrough), and **sensor
+    dropout** (the rack telemetry renders as NaN and the PDU bridges it
+    with a last-good-sample hold);
+  * episodes stored as sorted ``(R, K)`` start/end sample-index arrays, so
+    membership at any absolute sample is two ``searchsorted`` counts —
+    pure in the absolute index, which is what keeps chunked rendering
+    bit-identical to whole-trace rendering and fault state resume-safe.
+
+The schedule rides in ``Scenario.faults`` (see ``power.scenario``) and is
+consumed by the renderer (rack/sensor channels) and by the fleet engines'
+per-interval ESS availability mask (``interval_online``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import pytree_dataclass
+
+# "never happens" sentinel, same convention as ``scenario.NEVER`` (defined
+# here as well so this module stays import-cycle-free: scenario imports
+# faults for render integration).
+NEVER = 1e30
+
+# Episode-count cap per (rack, channel): a backstop against absurd rates,
+# far above anything a realistic MTBF/MTTR pair produces over one scenario.
+MAX_EPISODES = 512
+
+
+@pytree_dataclass
+class FaultProcess:
+    """Per-channel alternating-renewal rates (seconds; scalars or (R,)).
+
+    ``NEVER`` (or any MTBF beyond ~1e29 s) disables a channel.  Mean up
+    time = MTBF, mean down time = MTTR; durations are geometric in samples
+    (the discrete-time memoryless process), floored at one sample.
+    """
+
+    rack_mtbf_s: jax.Array
+    rack_mttr_s: jax.Array
+    ess_mtbf_s: jax.Array
+    ess_mttr_s: jax.Array
+    sensor_mtbf_s: jax.Array
+    sensor_mttr_s: jax.Array
+    p_fault: jax.Array  # rack power while a rack-loss episode is active
+
+    @staticmethod
+    def create(
+        *,
+        rack_mtbf_s=NEVER,
+        rack_mttr_s=30.0,
+        ess_mtbf_s=NEVER,
+        ess_mttr_s=60.0,
+        sensor_mtbf_s=NEVER,
+        sensor_mttr_s=5.0,
+        p_fault=0.02,
+    ) -> "FaultProcess":
+        for name, mtbf, mttr in (
+            ("rack", rack_mtbf_s, rack_mttr_s),
+            ("ess", ess_mtbf_s, ess_mttr_s),
+            ("sensor", sensor_mtbf_s, sensor_mttr_s),
+        ):
+            if np.any(np.asarray(mtbf, np.float64) <= 0.0):
+                raise ValueError(
+                    f"{name}_mtbf_s must be > 0 (got {mtbf}); use "
+                    f"faults.NEVER to disable the channel"
+                )
+            if np.any(np.asarray(mttr, np.float64) <= 0.0):
+                raise ValueError(f"{name}_mttr_s must be > 0 (got {mttr})")
+        f = lambda v: jnp.asarray(v, jnp.float32)
+        return FaultProcess(
+            rack_mtbf_s=f(rack_mtbf_s),
+            rack_mttr_s=f(rack_mttr_s),
+            ess_mtbf_s=f(ess_mtbf_s),
+            ess_mttr_s=f(ess_mttr_s),
+            sensor_mtbf_s=f(sensor_mtbf_s),
+            sensor_mttr_s=f(sensor_mttr_s),
+            p_fault=f(p_fault),
+        )
+
+
+@pytree_dataclass
+class FaultSchedule:
+    """Compiled struct-of-arrays fault schedule (concrete at construction).
+
+    Each channel holds sorted ``(R, K)`` int32 absolute sample indices:
+    episode ``j`` of rack ``r`` is active over ``[start[r, j], end[r, j])``.
+    Unused slots are padded with ``start == end`` (empty interval), so
+    membership tests need no validity mask.  The schedule is an ordinary
+    pytree and rides inside ``Scenario`` as traced jit data.
+    """
+
+    rack_start: jax.Array  # (R, K) int32
+    rack_end: jax.Array
+    ess_start: jax.Array
+    ess_end: jax.Array
+    sensor_start: jax.Array
+    sensor_end: jax.Array
+    p_fault: jax.Array  # (R,) float32 rack power during a rack-loss episode
+
+    @property
+    def n_racks(self) -> int:
+        return self.rack_start.shape[0]
+
+
+# ------------------------------------------------------------- construction
+
+
+def _geometric_samples(u: np.ndarray, mean_s, sample_hz: float) -> np.ndarray:
+    """Geometric durations (in samples, >= 1) with mean ``mean_s`` seconds.
+
+    Float64 throughout: a disabled channel (mean = NEVER) yields ~1e32
+    samples, far past any trace but comfortably inside float64 — the
+    boundaries are clamped to the trace before the int32 cast.
+    """
+    n_bar = np.maximum(np.asarray(mean_s, np.float64) * sample_hz, 1.0)
+    p = 1.0 / n_bar
+    # n = floor(ln u / ln(1-p)) + 1 ~ Geometric(p) on {1, 2, ...}
+    return np.floor(np.log(u) / np.log1p(-p)) + 1.0
+
+
+def _channel_episodes(
+    key, tag: int, n_racks: int, total_samples: int, sample_hz: float,
+    mtbf_s, mttr_s, max_episodes: int | None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Sample one channel's (R, K) sorted start/end sample indices.
+
+    The process starts in the up state (a rack is healthy at sample 0),
+    alternates geometric up/down durations, and is truncated at the trace
+    end.  Draw counter-based: ``fold_in(fold_in(key, tag), rack)`` keys a
+    (K, 2) uniform block per rack, so the schedule for rack r is invariant
+    to the fleet size and to every other channel.
+    """
+    mtbf = np.broadcast_to(np.asarray(mtbf_s, np.float64), (n_racks,))
+    mttr = np.broadcast_to(np.asarray(mttr_s, np.float64), (n_racks,))
+    if max_episodes is None:
+        cycle = (np.min(mtbf) + np.min(mttr)) * sample_hz
+        expect = total_samples / max(cycle, 1.0)
+        max_episodes = int(np.clip(np.ceil(3.0 * expect + 4.0), 1, MAX_EPISODES))
+    k = int(max_episodes)
+    ck = jax.random.fold_in(key, tag)
+    u = np.asarray(
+        jax.vmap(
+            lambda r: jax.random.uniform(
+                jax.random.fold_in(ck, r), (k, 2), jnp.float32,
+                minval=1e-7, maxval=1.0,
+            )
+        )(jnp.arange(n_racks, dtype=jnp.int32)),
+        np.float64,
+    )  # (R, K, 2)
+    up = _geometric_samples(u[:, :, 0], mtbf[:, None], sample_hz)
+    down = _geometric_samples(u[:, :, 1], mttr[:, None], sample_hz)
+    start = np.cumsum(up, axis=1) + np.concatenate(
+        [np.zeros((n_racks, 1)), np.cumsum(down, axis=1)[:, :-1]], axis=1
+    )
+    end = start + down
+    t = float(total_samples)
+    start = np.clip(start, 0.0, t)
+    end = np.clip(end, 0.0, t)
+    return start.astype(np.int32), end.astype(np.int32)
+
+
+def sample_schedule(
+    process: FaultProcess,
+    n_racks: int,
+    total_samples: int,
+    sample_hz: float,
+    *,
+    seed: int,
+    max_episodes: int | None = None,
+) -> FaultSchedule:
+    """Compile a ``FaultProcess`` into a concrete ``FaultSchedule``."""
+    if total_samples <= 0:
+        raise ValueError(f"total_samples must be positive, got {total_samples}")
+    if n_racks <= 0:
+        raise ValueError(f"n_racks must be positive, got {n_racks}")
+    key = jax.random.key(seed)
+    rs, re = _channel_episodes(
+        key, 0, n_racks, total_samples, sample_hz,
+        process.rack_mtbf_s, process.rack_mttr_s, max_episodes,
+    )
+    es, ee = _channel_episodes(
+        key, 1, n_racks, total_samples, sample_hz,
+        process.ess_mtbf_s, process.ess_mttr_s, max_episodes,
+    )
+    ss, se = _channel_episodes(
+        key, 2, n_racks, total_samples, sample_hz,
+        process.sensor_mtbf_s, process.sensor_mttr_s, max_episodes,
+    )
+    return FaultSchedule(
+        rack_start=jnp.asarray(rs), rack_end=jnp.asarray(re),
+        ess_start=jnp.asarray(es), ess_end=jnp.asarray(ee),
+        sensor_start=jnp.asarray(ss), sensor_end=jnp.asarray(se),
+        p_fault=jnp.broadcast_to(
+            jnp.asarray(process.p_fault, jnp.float32), (n_racks,)
+        ),
+    )
+
+
+def schedule_from_episodes(
+    n_racks: int,
+    *,
+    rack: list[tuple[int, int, int]] = (),
+    ess: list[tuple[int, int, int]] = (),
+    sensor: list[tuple[int, int, int]] = (),
+    p_fault=0.02,
+) -> FaultSchedule:
+    """Scripted schedule from explicit ``(rack_idx, start, end)`` episodes
+    (sample indices, end exclusive) — deterministic fault injection for
+    tests, benches, and the ``fleet.apply_failures`` compatibility shim."""
+
+    def pack(eps):
+        per: list[list[tuple[int, int]]] = [[] for _ in range(n_racks)]
+        for r, s, e in eps:
+            if not 0 <= r < n_racks:
+                raise ValueError(f"rack index {r} outside fleet of {n_racks}")
+            if e < s or s < 0:
+                raise ValueError(f"bad episode [{s}, {e}) for rack {r}")
+            per[r].append((int(s), int(e)))
+        k = max(max((len(p) for p in per), default=0), 1)
+        # Pad unused slots *after* the real episodes with an empty interval
+        # at int32 max so every row stays sorted — the searchsorted
+        # membership tests silently misbehave on unsorted rows.
+        pad = np.iinfo(np.int32).max
+        start = np.full((n_racks, k), pad, np.int32)
+        end = np.full((n_racks, k), pad, np.int32)
+        for r, p in enumerate(per):
+            for j, (s, e) in enumerate(sorted(p)):
+                start[r, j], end[r, j] = s, e
+        return jnp.asarray(start), jnp.asarray(end)
+
+    rs, re = pack(rack)
+    es, ee = pack(ess)
+    ss, se = pack(sensor)
+    return FaultSchedule(
+        rack_start=rs, rack_end=re, ess_start=es, ess_end=ee,
+        sensor_start=ss, sensor_end=se,
+        p_fault=jnp.broadcast_to(jnp.asarray(p_fault, jnp.float32), (n_racks,)),
+    )
+
+
+def inject_episodes(
+    s: FaultSchedule,
+    *,
+    rack: list[tuple[int, int, int]] = (),
+    ess: list[tuple[int, int, int]] = (),
+    sensor: list[tuple[int, int, int]] = (),
+) -> FaultSchedule:
+    """Merge scripted ``(rack_idx, start, end)`` episodes into an existing
+    schedule, returning a new ``FaultSchedule``.
+
+    This is how a deterministic event — a scripted cascade, a planned
+    maintenance window — rides alongside a stochastically sampled
+    background process: the injected episodes are unioned with each rack's
+    existing episodes (overlaps coalesce), rows are re-sorted, and the
+    invariants the membership tests rely on (sorted, non-overlapping,
+    empty-interval padding) are re-established.
+    """
+
+    def merge(starts, ends, extra):
+        st = np.asarray(starts)
+        en = np.asarray(ends)
+        per: dict[int, list[tuple[int, int]]] = {}
+        for r, a, b in extra:
+            if not 0 <= r < st.shape[0]:
+                raise ValueError(
+                    f"rack index {r} outside fleet of {st.shape[0]}"
+                )
+            if b < a or a < 0:
+                raise ValueError(f"bad episode [{a}, {b}) for rack {r}")
+            per.setdefault(int(r), []).append((int(a), int(b)))
+        if not per:
+            return jnp.asarray(st), jnp.asarray(en)
+        rows: list[list[tuple[int, int]]] = []
+        for r in range(st.shape[0]):
+            real = en[r] > st[r]
+            eps = sorted(
+                [(int(a), int(b)) for a, b in zip(st[r][real], en[r][real])]
+                + per.get(r, [])
+            )
+            out: list[tuple[int, int]] = []
+            for a, b in eps:  # union of intervals
+                if out and a <= out[-1][1]:
+                    out[-1] = (out[-1][0], max(out[-1][1], b))
+                else:
+                    out.append((a, b))
+            rows.append(out)
+        k = max(max(len(r) for r in rows), 1)
+        pad = np.iinfo(np.int32).max
+        ns = np.full((st.shape[0], k), pad, np.int32)
+        ne = np.full((st.shape[0], k), pad, np.int32)
+        for r, eps in enumerate(rows):
+            for j, (a, b) in enumerate(eps):
+                ns[r, j], ne[r, j] = a, b
+        return jnp.asarray(ns), jnp.asarray(ne)
+
+    rs, re = merge(s.rack_start, s.rack_end, rack)
+    es, ee = merge(s.ess_start, s.ess_end, ess)
+    ss, se = merge(s.sensor_start, s.sensor_end, sensor)
+    return FaultSchedule(
+        rack_start=rs, rack_end=re, ess_start=es, ess_end=ee,
+        sensor_start=ss, sensor_end=se, p_fault=s.p_fault,
+    )
+
+
+# --------------------------------------------------------------- membership
+
+
+def _active(starts: jax.Array, ends: jax.Array, idx: jax.Array) -> jax.Array:
+    """(n, R) bool: is any episode of each rack active at each sample?
+
+    Episode rows are sorted and non-overlapping (alternating process), so
+    membership is ``#started - #ended > 0`` — two searchsorted counts per
+    rack, no (n, R, K) materialization.
+    """
+    def per_rack(st, en):
+        return (
+            jnp.searchsorted(st, idx, side="right")
+            - jnp.searchsorted(en, idx, side="right")
+        )
+
+    return (jax.vmap(per_rack)(starts, ends) > 0).T  # (R, n) -> (n, R)
+
+
+def rack_down(s: FaultSchedule, t0: jax.Array, n: int) -> jax.Array:
+    """(n, R) bool: rack-power-loss membership for samples [t0, t0+n)."""
+    idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    return _active(s.rack_start, s.rack_end, idx)
+
+
+def _edge_intensity(
+    starts: jax.Array, ends: jax.Array, idx: jax.Array, edge: int
+) -> jax.Array:
+    """(n, R) float32 episode intensity in [0, 1] with linearised edges:
+    ramps 0 -> 1 over the ``edge`` samples following an episode start and
+    1 -> 0 over the ``edge`` samples following its end.  ``edge <= 1``
+    reduces exactly to binary membership.
+
+    Each sample's intensity depends only on its absolute index and the
+    static schedule (episode rows are sorted and non-overlapping, so the
+    most recent start fully determines the local ramp), which keeps
+    chunked evaluation bit-identical to whole-trace evaluation.
+    """
+    if edge <= 1:
+        return _active(starts, ends, idx).astype(jnp.float32)
+
+    inv = 1.0 / float(edge)
+
+    def per_rack(st, en):
+        j = jnp.searchsorted(st, idx, side="right") - 1
+        jc = jnp.clip(j, 0, st.shape[0] - 1)
+        a = (idx - st[jc]).astype(jnp.float32)
+        b = (idx - en[jc]).astype(jnp.float32)
+        w = jnp.clip((a + 1.0) * inv, 0.0, 1.0) - jnp.clip(
+            (b + 1.0) * inv, 0.0, 1.0
+        )
+        return jnp.where(j >= 0, w, 0.0)
+
+    return jax.vmap(per_rack)(starts, ends).T  # (R, n) -> (n, R)
+
+
+def fault_weight(
+    s: FaultSchedule, t0: jax.Array, n: int, edge: int
+) -> jax.Array:
+    """(n, R) float32 rack power-loss intensity in [0, 1].
+
+    ``rack_down`` with the fault edges linearised over ``edge`` samples.
+    A breaker trip is not a zero-time event at the PDU — PSU bulk
+    capacitance and the staggered shutdown of servers inside the rack
+    spread the collapse over the same transition window the renderer
+    already applies to workload edges, and a one-sample cliff would put
+    an unphysical ``p_step/dt`` impulse on the grid ramp metric.
+    """
+    idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    return _edge_intensity(s.rack_start, s.rack_end, idx, edge)
+
+
+def ess_weight(
+    s: FaultSchedule, t0: jax.Array, n: int, edge: int
+) -> jax.Array:
+    """(n, R) float32 *per-sample* ESS availability weight in [0, 1]:
+    1 = battery branch fully engaged, 0 = tripped offline, fractional
+    during the ``edge``-sample converter wind-down/soft-start around each
+    trip/repair.
+
+    This is the hardware plane's view of the ESS channel.  The software
+    plane (`interval_online`) quantises trips to controller-interval
+    boundaries, which is right for QP admission but would synchronise
+    every trip handoff in the same 5 s interval onto one sample — a
+    fabricated campus-scale step.  The hardware weight keeps each trip at
+    its scheduled sample and winds the converter down over ``edge``
+    samples (a protective BMS shutdown ramps the converter; the stored LC
+    energy rides through), so concurrent trips decorrelate exactly as the
+    sampled schedule says they do.  Pure in the absolute sample index —
+    chunked, resumed, and one-shot conditioning see identical weights.
+    """
+    idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    return 1.0 - _edge_intensity(s.ess_start, s.ess_end, idx, edge)
+
+
+def sensor_down(s: FaultSchedule, t0: jax.Array, n: int) -> jax.Array:
+    """(n, R) bool: sensor-dropout membership for samples [t0, t0+n)."""
+    idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
+    return _active(s.sensor_start, s.sensor_end, idx)
+
+
+def interval_online(
+    s: FaultSchedule, start_sample: jax.Array, n_intervals: int, k: int
+) -> jax.Array:
+    """(n_intervals, R) float32 ESS availability mask, one row per
+    controller interval starting at ``start_sample``.
+
+    Trips are quantized to the controller interval they start in (the unit
+    is considered offline for interval ``i`` iff an ESS episode covers the
+    interval's first sample) — a pure function of the absolute interval
+    index, so chunked, resumed, and one-shot conditioning see the same
+    mask bit-for-bit.
+    """
+    idx = jnp.asarray(start_sample, jnp.int32) + k * jnp.arange(
+        n_intervals, dtype=jnp.int32
+    )
+    down = _active(s.ess_start, s.ess_end, idx)
+    return 1.0 - down.astype(jnp.float32)
+
+
+def episodes_in_window(
+    s: FaultSchedule, start_sample: int, stop_sample: int
+) -> list[dict]:
+    """Host-side event extraction for audit logs: every fault/repair edge
+    in ``[start_sample, stop_sample)``, sorted by sample index."""
+    out: list[dict] = []
+    for channel, st, en in (
+        ("rack_power", s.rack_start, s.rack_end),
+        ("ess", s.ess_start, s.ess_end),
+        ("sensor", s.sensor_start, s.sensor_end),
+    ):
+        st = np.asarray(st)
+        en = np.asarray(en)
+        real = en > st
+        for r, j in np.argwhere(real & (st >= start_sample) & (st < stop_sample)):
+            out.append(dict(event="fault", channel=channel, rack=int(r),
+                            sample=int(st[r, j]), until=int(en[r, j])))
+        for r, j in np.argwhere(real & (en >= start_sample) & (en < stop_sample)):
+            out.append(dict(event="repair", channel=channel, rack=int(r),
+                            sample=int(en[r, j])))
+    out.sort(key=lambda d: (d["sample"], d["rack"], d["event"]))
+    return out

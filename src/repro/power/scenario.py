@@ -80,6 +80,31 @@ class WorkloadParams:
     noise_std: jax.Array
 
 
+def _concrete(x) -> np.ndarray | None:
+    """Host view of a value for construction-time validation; None if the
+    value is a tracer (validation is skipped inside jit — the builders are
+    host-side constructors in every supported path)."""
+    try:
+        return np.asarray(x)
+    except Exception:
+        return None
+
+
+def _validate_workload(w: WorkloadParams) -> WorkloadParams:
+    fd = _concrete(w.fault_duration_s)
+    if fd is not None and np.any(fd < 0.0):
+        raise ValueError(
+            f"fault_duration_s must be >= 0, got {fd} — a negative window "
+            "would silently render as no fault at all"
+        )
+    fa = _concrete(w.fault_at_s)
+    if fa is not None and np.any(fa < 0.0):
+        raise ValueError(
+            f"fault_at_s must be >= 0 (or NEVER to disable), got {fa}"
+        )
+    return w
+
+
 def workload(
     *,
     iteration_period_s=22.0,
@@ -104,7 +129,7 @@ def workload(
 ) -> WorkloadParams:
     """Build ``WorkloadParams`` from keyword knobs (scalars or (R,) arrays)."""
     as32 = lambda x: jnp.asarray(x, jnp.float32)
-    return WorkloadParams(
+    return _validate_workload(WorkloadParams(
         iteration_period_s=as32(iteration_period_s),
         comm_fraction=as32(comm_fraction),
         p_compute=as32(p_compute),
@@ -124,7 +149,7 @@ def workload(
         diurnal_phase_s=as32(diurnal_phase_s),
         scale=as32(scale),
         noise_std=as32(noise_std),
-    )
+    ))
 
 
 def stack_workloads(params_list: list[WorkloadParams]) -> WorkloadParams:
@@ -152,11 +177,24 @@ class Scenario:
     # Noise level for segment-table scenarios (parametric scenarios carry
     # theirs in ``params.noise_std``); None = 0.
     seg_noise_std: jax.Array | None = None
+    # Compiled stochastic fault schedule (``power.faults.FaultSchedule``);
+    # the rack-power-loss and sensor-dropout channels apply at render time,
+    # the ESS-trip channel is consumed by the fleet engines' per-interval
+    # availability mask.  None = fault-free.
+    faults: object | None = None
     sample_hz: float = static_field(default=1000.0)
     total_samples: int = static_field(default=0)
     # Edge smoothing window in samples (0/1 = off): steps become linear
     # ramps of ~edge_width*dt, identical to the legacy boxcar convolution.
     edge_width: int = static_field(default=0)
+    # Boundary handling for the smoothing window: "zero" (legacy boxcar —
+    # samples beyond the trace read as 0, so power decays to ~p/2 across
+    # the first/last half-window) or "clamp" (edge replication — no
+    # fabricated transient at the trace boundaries).  "zero" keeps every
+    # existing trace bitwise; "clamp" is what compliance-bearing campus
+    # benches want, since the zero-pad decay is synchronized fleet-wide
+    # and reads as a phantom campus-scale power step.
+    edge_pad: str = static_field(default="zero")
     # Counter-based noise: sample i draws from fold_in(key(seed), i), so
     # noise is chunk-invariant.  None disables noise entirely.
     noise_seed: int | None = static_field(default=None)
@@ -187,18 +225,72 @@ def make_scenario(
     duration_s: float,
     sample_hz: float,
     edge_time_s: float = 0.25,
+    edge_pad: str = "zero",
     noise_seed: int | None = None,
+    faults=None,
 ) -> Scenario:
-    """Wrap parametric workloads into a renderable ``Scenario``."""
+    """Wrap parametric workloads into a renderable ``Scenario``.
+
+    A scripted ``fault_at_s`` must land inside the trace: a window starting
+    at or past ``duration_s`` would silently render as a no-op, so it is
+    rejected here (use ``NEVER`` to disable the fault).
+    """
+    total = int(round(duration_s * sample_hz))
+    if edge_pad not in ("zero", "clamp"):
+        raise ValueError(
+            f"edge_pad must be 'zero' or 'clamp', got {edge_pad!r}"
+        )
+    fa = _concrete(params.fault_at_s)
+    if fa is not None:
+        scripted = fa < 0.5 * NEVER
+        if np.any(scripted & (fa * sample_hz >= total)):
+            bad = np.asarray(fa)[np.asarray(scripted & (fa * sample_hz >= total))]
+            raise ValueError(
+                f"fault_at_s {np.unique(bad)} is past the scenario end "
+                f"({duration_s} s = {total} samples); use NEVER to disable"
+            )
     return Scenario(
         params=params,
         seg_bounds=None,
         seg_powers=None,
+        faults=faults,
         sample_hz=float(sample_hz),
-        total_samples=int(round(duration_s * sample_hz)),
+        total_samples=total,
         edge_width=_edge_width(edge_time_s, sample_hz),
+        edge_pad=edge_pad,
         noise_seed=noise_seed,
     )
+
+
+def attach_faults(
+    s: Scenario,
+    process_or_schedule,
+    *,
+    seed: int = 0,
+    max_episodes: int | None = None,
+) -> Scenario:
+    """Return ``s`` with a stochastic fault schedule attached.
+
+    Accepts a ``faults.FaultProcess`` (sampled here against the scenario's
+    geometry with counter-based draws) or a pre-built
+    ``faults.FaultSchedule`` (rack count must match).
+    """
+    from repro.power import faults as FLT
+
+    n = s.n_racks or 1
+    if isinstance(process_or_schedule, FLT.FaultSchedule):
+        sched = process_or_schedule
+    else:
+        sched = FLT.sample_schedule(
+            process_or_schedule, n, s.total_samples, s.sample_hz,
+            seed=seed, max_episodes=max_episodes,
+        )
+    if sched.n_racks != n:
+        raise ValueError(
+            f"fault schedule covers {sched.n_racks} racks but the scenario "
+            f"has {n}"
+        )
+    return s.replace(faults=sched)
 
 
 def _edge_width(edge_time_s: float, sample_hz: float) -> int:
@@ -278,9 +370,17 @@ def _render_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
         c = (w - 1) // 2
         lo = w - 1 - c
         eidx = (t0 - lo) + jnp.arange(n + w - 1, dtype=jnp.int32)
-        base = _base(s, eidx)
-        valid = (eidx >= 0) & (eidx < s.total_samples)
-        base = jnp.where(valid if base.ndim == 1 else valid[:, None], base, 0.0)
+        if s.edge_pad == "clamp":
+            # Edge replication: the window reads the first/last sample
+            # instead of zeros, so the trace boundaries carry no phantom
+            # decay.  Still pure in the absolute index -> chunk-bitwise.
+            base = _base(s, jnp.clip(eidx, 0, s.total_samples - 1))
+        else:
+            base = _base(s, eidx)
+            valid = (eidx >= 0) & (eidx < s.total_samples)
+            base = jnp.where(
+                valid if base.ndim == 1 else valid[:, None], base, 0.0
+            )
         p = _pairwise_sum([base[j : j + n] for j in range(w)]) / w
     else:
         p = _base(s, idx)
@@ -293,6 +393,19 @@ def _render_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
         tb = t[:, None] if p.ndim == 2 else t
         in_fault = (tb >= wp.fault_at_s) & (tb < wp.fault_at_s + wp.fault_duration_s)
         p = jnp.where(in_fault, wp.p_fault, p)
+
+    if s.faults is not None:
+        # Stochastic rack power loss: the collapse/recovery is linearised
+        # over the scenario's edge window (PSU bulk caps + staggered server
+        # shutdown — see faults.fault_weight), still pure in the absolute
+        # sample index, so chunked rendering stays bit-identical.
+        from repro.power import faults as _flt
+
+        wgt = _flt.fault_weight(s.faults, t0, n, max(w, 1))  # (n, R)
+        pf = s.faults.p_fault
+        if p.ndim == 1:
+            wgt, pf = wgt[:, 0], pf[0]
+        p = p + wgt * (pf - p)
 
     if s.noise_seed is not None:
         key = jax.random.key(s.noise_seed)
@@ -308,6 +421,18 @@ def _render_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
 
     if wp is not None:
         p = p * wp.scale
+
+    if s.faults is not None:
+        # Sensor dropout is a *measurement* fault, so it lands last: the
+        # telemetry consumer sees NaN where the sensor went dark.  The fleet
+        # engines bridge these with a last-good-sample hold before any state
+        # update, so NaN never enters the conditioning scan.
+        from repro.power import faults as _flt
+
+        dead = _flt.sensor_down(s.faults, t0, n)
+        if p.ndim == 1:
+            dead = dead[:, 0]
+        p = jnp.where(dead, jnp.nan, p)
     return p.astype(jnp.float32)
 
 
@@ -531,6 +656,7 @@ def mixed_campus(
     fault_cascade_s: float = 5.0,
     fault_duration_s: float = 30.0,
     edge_time_s: float = 0.25,
+    edge_pad: str = "zero",
     noise_seed: int | None = None,
 ) -> Scenario:
     """A heterogeneous campus: training racks cycling different assigned
@@ -581,5 +707,6 @@ def mixed_campus(
         duration_s=duration_s,
         sample_hz=sample_hz,
         edge_time_s=edge_time_s,
+        edge_pad=edge_pad,
         noise_seed=noise_seed,
     )

@@ -1,4 +1,12 @@
-"""Serving substrate: prefill/decode step builders + batched generation."""
+"""Serving substrate: prefill/decode step builders + batched generation,
+plus the resume-safe power-conditioner operator service."""
+from repro.serve.conditioner import AuditLog, ConditionerService
 from repro.serve.engine import ServeEngine, build_prefill_step, build_decode_step
 
-__all__ = ["ServeEngine", "build_prefill_step", "build_decode_step"]
+__all__ = [
+    "AuditLog",
+    "ConditionerService",
+    "ServeEngine",
+    "build_prefill_step",
+    "build_decode_step",
+]

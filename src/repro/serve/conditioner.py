@@ -1,0 +1,322 @@
+"""Resume-safe operator service for the power conditioner (ISSUE 6).
+
+``ConditionerService`` wraps the scanned streaming engine
+(``fleet.condition_scenario_scanned``) in the loop a campus operator
+actually runs: advance the stream window by window, checkpoint the carried
+``PDUState`` at controller-interval boundaries, restore after a crash and
+continue with *bitwise identical* downstream telemetry, and keep an
+append-only JSONL audit log of everything that happened — scheduled
+faults/repairs from the scenario's fault schedule, degraded-mode entry and
+exit, manual ESS trips injected by the operator, compliance verdicts, and
+checkpoint/restore events.
+
+Resume safety comes from two facts the engines already guarantee:
+
+  * Window aggregates of ``[start, stop)`` are pure in the absolute sample
+    index (renderer, fault schedule, and availability mask all are), so a
+    restored service re-enters the stream exactly where it left off.
+  * Fixed-size windows share one cached compiled engine, so the resumed
+    run is not just numerically close but the *same program on the same
+    floats* — the crash-resume test asserts bitwise equality.
+
+The audit log is strict JSON (``allow_nan=False``): health summaries are
+clamped via ``health.fleet_summary(..., json_safe=True)``, so an empty
+wear history's infinite projected lifetime becomes ``null`` instead of the
+non-standard ``Infinity`` literal that breaks downstream parsers.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compliance, fleet, health as hlt, pdu
+
+
+class AuditLog:
+    """Append-only JSONL event log (in-memory ring + optional file).
+
+    Every record is one line of strict JSON (``allow_nan=False``), flushed
+    on write — the file is valid and tail-able at any crash point, which is
+    the whole point of an audit log.
+    """
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = os.fspath(path) if path is not None else None
+        self._events: list[dict] = []
+
+    def append(self, event: str, **fields) -> dict:
+        rec = dict(event=event, **fields)
+        line = json.dumps(rec, sort_keys=True, allow_nan=False)
+        self._events.append(rec)
+        if self.path is not None:
+            with open(self.path, "a") as f:
+                f.write(line + "\n")
+        return rec
+
+    def tail(self, n: int = 10) -> list[dict]:
+        return self._events[-n:]
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+
+class ConditionerService:
+    """Operator loop over the scanned conditioning engine.
+
+    Parameters mirror ``fleet.condition_scenario_scanned``; the service
+    owns the carried ``PDUState`` and the absolute stream position (in
+    samples), both of which ride in checkpoints.
+    """
+
+    def __init__(
+        self,
+        cfg: pdu.PDUConfig,
+        scenario,
+        grid_spec: compliance.GridSpec,
+        *,
+        chunk_intervals: int = 16,
+        qp_iters: int = 30,
+        soc0: float = 0.5,
+        audit_path: str | os.PathLike | None = None,
+    ):
+        from repro.core.fleet import _check_scenario_faults, _check_scenario_rate
+        from repro.power import scenario as SC
+
+        _check_scenario_rate(scenario, cfg)
+        _check_scenario_faults(scenario, cfg)
+        self.cfg = cfg
+        self.scenario = scenario
+        self.grid_spec = grid_spec
+        self.chunk_intervals = int(chunk_intervals)
+        self.qp_iters = int(qp_iters)
+        self._k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
+        self.sample_pos = 0
+        self.audit = AuditLog(audit_path)
+        self._degraded_now = False
+        self._last_result: fleet.StreamingFleetResult | None = None
+
+        r0 = SC.render(scenario, 0, 1)[0]
+        if r0.ndim == 0:
+            r0 = r0[None]
+        self.state = pdu.init_state(cfg, r0, soc0=soc0)
+        self.n_racks = int(np.asarray(self.state.ess_online).shape[0])
+        self.audit.append(
+            "service_start",
+            sample=0,
+            n_racks=self.n_racks,
+            total_samples=int(scenario.total_samples),
+            sample_hz=float(scenario.sample_hz),
+            degraded_mode=bool(cfg.degraded_mode),
+            has_fault_schedule=getattr(scenario, "faults", None) is not None,
+        )
+
+    # ------------------------------------------------------------- position
+
+    @property
+    def position_s(self) -> float:
+        return self.sample_pos / float(self.scenario.sample_hz)
+
+    @property
+    def exhausted(self) -> bool:
+        return self.sample_pos >= int(self.scenario.total_samples)
+
+    # -------------------------------------------------------------- advance
+
+    def advance(self, n_intervals: int | None = None) -> fleet.StreamingFleetResult:
+        """Condition the next ``n_intervals`` controller intervals.
+
+        Defaults to one chunk (``chunk_intervals``); fixed-size windows
+        reuse one cached compiled engine, so steady-state advancing never
+        retraces.  Returns the window's ``StreamingFleetResult`` and logs
+        the window's scheduled fault/repair edges, degraded entry/exit,
+        and the compliance verdict.
+        """
+        if self.exhausted:
+            raise RuntimeError(
+                f"stream exhausted at sample {self.sample_pos}; nothing to advance"
+            )
+        n = self.chunk_intervals if n_intervals is None else int(n_intervals)
+        if n <= 0:
+            raise ValueError(f"n_intervals must be positive, got {n}")
+        start = self.sample_pos
+        stop = min(start + n * self._k, int(self.scenario.total_samples))
+        res = fleet.condition_scenario_scanned(
+            self.cfg,
+            self.scenario,
+            self.grid_spec,
+            qp_iters=self.qp_iters,
+            chunk_intervals=self.chunk_intervals,
+            state=self.state,
+            start_sample=start,
+            stop_sample=stop,
+        )
+        self.state = res.state
+        self.sample_pos = stop
+        self._last_result = res
+        self._log_window(start, stop, res)
+        return res
+
+    def _log_window(self, start: int, stop: int, res: fleet.StreamingFleetResult):
+        sched = getattr(self.scenario, "faults", None)
+        if sched is not None:
+            from repro.power import faults as FLT
+
+            for ev in FLT.episodes_in_window(sched, start, stop):
+                self.audit.append(**ev)
+        frac = np.asarray(res.ess_online_frac)
+        degraded = bool(frac.size) and float(frac.min()) < 1.0
+        if degraded and not self._degraded_now:
+            self.audit.append(
+                "degraded_enter", sample=start, min_online_frac=float(frac.min())
+            )
+        elif self._degraded_now and not degraded:
+            self.audit.append("degraded_exit", sample=start)
+        self._degraded_now = degraded
+        ramp_ok = bool(np.asarray(res.report_grid.ramp_ok))
+        spec_ok = bool(np.asarray(res.report_grid.spectrum_ok))
+        self.audit.append(
+            "window",
+            sample=start,
+            stop=stop,
+            ramp_ok=ramp_ok,
+            spectrum_ok=spec_ok,
+            min_online_frac=float(frac.min()) if frac.size else 1.0,
+            max_qp_residual=float(np.asarray(res.max_qp_residual)),
+        )
+        if not (ramp_ok and spec_ok):
+            self.audit.append(
+                "compliance_violation", sample=start, stop=stop,
+                ramp_ok=ramp_ok, spectrum_ok=spec_ok,
+            )
+
+    # ----------------------------------------------------- manual overrides
+
+    def inject_fault(self, racks: Sequence[int] | int, *, reason: str = "manual"):
+        """Trip the given racks' ESS units offline until ``clear_fault``.
+
+        This is the operator's kill switch: it writes the persistent
+        ``PDUState.ess_online`` override, which every engine multiplies
+        into the effective availability mask — independent of (and in
+        addition to) the scenario's stochastic schedule.
+        """
+        racks = self._check_racks(racks)
+        self.state = self.state._replace(
+            ess_online=self.state.ess_online.at[jnp.asarray(racks)].set(0.0)
+        )
+        self.audit.append(
+            "manual_fault_injected", sample=self.sample_pos, racks=racks,
+            reason=reason,
+        )
+
+    def clear_fault(self, racks: Sequence[int] | int):
+        """Return manually tripped racks to service."""
+        racks = self._check_racks(racks)
+        self.state = self.state._replace(
+            ess_online=self.state.ess_online.at[jnp.asarray(racks)].set(1.0)
+        )
+        self.audit.append(
+            "manual_fault_cleared", sample=self.sample_pos, racks=racks
+        )
+
+    def _check_racks(self, racks) -> list[int]:
+        racks = [int(r) for r in np.atleast_1d(np.asarray(racks, dtype=np.int64))]
+        bad = [r for r in racks if not 0 <= r < self.n_racks]
+        if bad:
+            raise ValueError(f"rack indices {bad} outside fleet of {self.n_racks}")
+        return racks
+
+    # ------------------------------------------------------ checkpoint/restore
+
+    def checkpoint(self, path: str | os.PathLike) -> str:
+        """Write the carried state + stream position to ``path`` (.npz).
+
+        Only valid at an interval boundary, which every ``advance`` stop
+        is — the state *is* the interval-boundary carry, so no mid-interval
+        capture is possible by construction.
+        """
+        path = os.fspath(path)
+        if not path.endswith(".npz"):
+            path += ".npz"  # np.savez appends it; return the real filename
+        leaves = jax.tree_util.tree_leaves(self.state)
+        np.savez(
+            path,
+            sample_pos=np.int64(self.sample_pos),
+            n_leaves=np.int64(len(leaves)),
+            **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)},
+        )
+        self.audit.append(
+            "checkpoint_saved", sample=self.sample_pos, path=path,
+        )
+        return path
+
+    def restore(self, path: str | os.PathLike) -> None:
+        """Load a checkpoint written by ``checkpoint`` into this service.
+
+        The service must be constructed over the same config and scenario
+        geometry (the checkpoint stores leaves, the treedef comes from the
+        live state); leaf count and shapes are validated.  Continuing with
+        ``advance`` reproduces the uninterrupted run bitwise — the
+        crash-resume regression test holds this to array equality.
+        """
+        path = os.fspath(path)
+        with np.load(path) as z:
+            n = int(z["n_leaves"])
+            template = jax.tree_util.tree_leaves(self.state)
+            if n != len(template):
+                raise ValueError(
+                    f"checkpoint has {n} leaves; this service's state has "
+                    f"{len(template)} — config/scenario mismatch"
+                )
+            leaves = []
+            for i, t in enumerate(template):
+                arr = z[f"leaf_{i}"]
+                if arr.shape != np.asarray(t).shape:
+                    raise ValueError(
+                        f"checkpoint leaf {i} shape {arr.shape} != expected "
+                        f"{np.asarray(t).shape} — config/scenario mismatch"
+                    )
+                leaves.append(jnp.asarray(arr))
+            treedef = jax.tree_util.tree_structure(self.state)
+            self.state = jax.tree_util.tree_unflatten(treedef, leaves)
+            self.sample_pos = int(z["sample_pos"])
+        self._last_result = None
+        self.audit.append("restored", sample=self.sample_pos, path=path)
+
+    # --------------------------------------------------------------- status
+
+    def status(self) -> dict:
+        """JSON-safe streaming snapshot for dashboards/health endpoints."""
+        manual_off = [
+            int(i) for i in np.flatnonzero(np.asarray(self.state.ess_online) <= 0.0)
+        ]
+        out = dict(
+            sample_pos=self.sample_pos,
+            position_s=self.position_s,
+            total_samples=int(self.scenario.total_samples),
+            exhausted=self.exhausted,
+            n_racks=self.n_racks,
+            degraded_active=self._degraded_now,
+            manual_offline_racks=manual_off,
+            audit_events=len(self.audit),
+        )
+        res = self._last_result
+        if res is not None:
+            frac = np.asarray(res.ess_online_frac)
+            out.update(
+                last_window=dict(
+                    ramp_ok=bool(np.asarray(res.report_grid.ramp_ok)),
+                    spectrum_ok=bool(np.asarray(res.report_grid.spectrum_ok)),
+                    min_online_frac=float(frac.min()) if frac.size else 1.0,
+                    mean_online_frac=float(frac.mean()) if frac.size else 1.0,
+                    max_qp_residual=float(np.asarray(res.max_qp_residual)),
+                ),
+                health=hlt.fleet_summary(res.health, json_safe=True),
+            )
+        # Strict-JSON guarantee: this must always survive allow_nan=False.
+        json.dumps(out, allow_nan=False)
+        return out

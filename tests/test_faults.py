@@ -1,0 +1,338 @@
+"""Fault-engine tests (ISSUE 6): stochastic fault/repair processes in the
+scenario IR, chunk-bitwise fault rendering, interval-quantized ESS masks,
+and degraded-mode conditioning semantics.
+
+The fault schedule is struct-of-arrays episode data; membership tests are
+pure in the absolute sample index, so every derived signal (rack power
+loss, sensor NaN windows, the per-interval ESS availability mask) must be
+chunk- and resume-invariant bit-for-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pdu
+from repro.power import faults as FLT, scenario as SC
+
+_HZ = 100.0
+
+
+def _proc(**kw):
+    base = dict(
+        rack_mtbf_s=50.0, rack_mttr_s=15.0,
+        ess_mtbf_s=40.0, ess_mttr_s=10.0,
+        sensor_mtbf_s=30.0, sensor_mttr_s=5.0,
+    )
+    base.update(kw)
+    return FLT.FaultProcess.create(**base)
+
+
+# ------------------------------------------------------------ sampling
+
+
+def test_sample_schedule_is_deterministic():
+    a = FLT.sample_schedule(_proc(), 8, 12000, _HZ, seed=3)
+    b = FLT.sample_schedule(_proc(), 8, 12000, _HZ, seed=3)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_sample_schedule_seeds_differ():
+    a = FLT.sample_schedule(_proc(), 8, 12000, _HZ, seed=3)
+    b = FLT.sample_schedule(_proc(), 8, 12000, _HZ, seed=4)
+    assert not np.array_equal(np.asarray(a.ess_start), np.asarray(b.ess_start))
+
+
+def test_sample_schedule_produces_episodes():
+    s = FLT.sample_schedule(_proc(), 8, 60000, _HZ, seed=1)
+    for st, en in (
+        (s.rack_start, s.rack_end),
+        (s.ess_start, s.ess_end),
+        (s.sensor_start, s.sensor_end),
+    ):
+        st, en = np.asarray(st), np.asarray(en)
+        assert np.any(en > st), "expected at least one episode per channel"
+        # rows sorted, episodes well-formed, padding start == end
+        assert np.all(en >= st)
+        assert np.all(np.diff(st, axis=1) >= 0)
+
+
+def test_fault_process_validates_timescales():
+    with pytest.raises(ValueError):
+        FLT.FaultProcess.create(rack_mtbf_s=0.0)
+    with pytest.raises(ValueError):
+        FLT.FaultProcess.create(ess_mttr_s=-1.0)
+
+
+def test_schedule_from_episodes_validates():
+    with pytest.raises(ValueError):
+        FLT.schedule_from_episodes(4, rack=[(7, 0, 10)])  # rack out of range
+    with pytest.raises(ValueError):
+        FLT.schedule_from_episodes(4, ess=[(1, 20, 10)])  # reversed window
+
+
+# ------------------------------------------------ chunk-bitwise membership
+
+
+def test_rack_and_sensor_down_chunk_bitwise():
+    s = FLT.sample_schedule(_proc(), 6, 9000, _HZ, seed=5)
+    for fn in (FLT.rack_down, FLT.sensor_down):
+        whole = np.asarray(fn(s, 0, 9000))
+        parts = np.concatenate(
+            [np.asarray(fn(s, t0, 1500)) for t0 in range(0, 9000, 1500)]
+        )
+        np.testing.assert_array_equal(whole, parts)
+
+
+def test_interval_online_chunk_invariant():
+    s = FLT.sample_schedule(_proc(), 6, 9000, _HZ, seed=5)
+    k = 500
+    whole = np.asarray(FLT.interval_online(s, 0, 18, k))
+    parts = np.concatenate(
+        [np.asarray(FLT.interval_online(s, t0, 3, k)) for t0 in range(0, 9000, 3 * k)]
+    )
+    np.testing.assert_array_equal(whole, parts)
+    assert whole.shape == (18, 6)
+    assert set(np.unique(whole)).issubset({0.0, 1.0})
+
+
+def test_interval_online_quantizes_to_interval_start():
+    # ESS trip mid-interval only takes effect judged at the interval-start
+    # sample: deterministic single episode covering samples [120, 380).
+    s = FLT.schedule_from_episodes(2, ess=[(0, 120, 380)])
+    on = np.asarray(FLT.interval_online(s, 0, 5, 100))
+    # interval starts at 0,100,200,300,400 -> offline where start in [120,380)
+    np.testing.assert_array_equal(on[:, 0], [1.0, 1.0, 0.0, 0.0, 1.0])
+    np.testing.assert_array_equal(on[:, 1], np.ones(5))
+
+
+def test_episodes_in_window_sorted_events():
+    s = FLT.schedule_from_episodes(
+        3, rack=[(1, 50, 90)], ess=[(0, 10, 60)], sensor=[(2, 70, 80)]
+    )
+    ev = FLT.episodes_in_window(s, 0, 100)
+    assert [e["event"] for e in ev].count("fault") == 3
+    assert [e["event"] for e in ev].count("repair") == 3
+    samples = [e["sample"] for e in ev]
+    assert samples == sorted(samples)
+    # window filtering
+    assert all(0 <= e["sample"] < 100 for e in ev)
+    assert FLT.episodes_in_window(s, 200, 300) == []
+
+
+# --------------------------------------------------- renderer integration
+
+
+def _faulty_campus(n_racks=5, duration_s=60.0, seed=2):
+    s = SC.mixed_campus(
+        n_racks, ("llama3_2_1b", "qwen1_5_4b"),
+        duration_s=duration_s, sample_hz=_HZ, seed=seed,
+    )
+    return SC.attach_faults(s, _proc(), seed=11)
+
+
+def test_render_applies_rack_fault_power():
+    s = _faulty_campus()
+    tr = np.asarray(SC.render(s, 0, s.total_samples))
+    wgt = np.asarray(
+        FLT.fault_weight(s.faults, 0, s.total_samples, max(s.edge_width, 1))
+    )
+    dead = np.asarray(FLT.sensor_down(s.faults, 0, s.total_samples))
+    pf = np.asarray(s.faults.p_fault)
+    hit = (wgt >= 1.0) & ~dead  # fully collapsed interior, past the edge ramp
+    assert np.any(hit), "schedule produced no visible rack outage"
+    # Noise and per-rack scale apply after the fault substitution (the
+    # faulted rack still has a real, slightly noisy meter), so the outage
+    # reads as idle-level power, not an exact constant.
+    np.testing.assert_allclose(
+        tr[hit], np.broadcast_to(pf, wgt.shape)[hit], atol=0.05
+    )
+    assert tr[hit].mean() < 0.1 < tr[(wgt == 0.0) & ~dead].mean()
+
+
+def test_fault_weight_ramps_over_edge_window():
+    edge = 8
+    sched = FLT.schedule_from_episodes(2, rack=[(1, 100, 200)])
+    w = np.asarray(FLT.fault_weight(sched, 0, 300, edge))
+    assert np.all(w[:, 0] == 0.0)
+    np.testing.assert_allclose(  # linear rise starting at the fault sample
+        w[100 : 100 + edge, 1], (np.arange(edge) + 1.0) / edge, rtol=1e-6
+    )
+    assert np.all(w[100 + edge : 200, 1] == 1.0)
+    np.testing.assert_allclose(  # linear decay after the repair sample
+        w[200 : 200 + edge, 1], 1.0 - (np.arange(edge) + 1.0) / edge,
+        atol=1e-6,
+    )
+    assert np.all(w[200 + edge :, 1] == 0.0)
+    # edge <= 1 reduces exactly to binary membership
+    b = np.asarray(FLT.fault_weight(sched, 0, 300, 1))
+    np.testing.assert_array_equal(
+        b, np.asarray(FLT.rack_down(sched, 0, 300)).astype(np.float32)
+    )
+    # chunked == whole, split mid-ramp
+    parts = np.concatenate(
+        [np.asarray(FLT.fault_weight(sched, t0, 50, edge))
+         for t0 in range(0, 300, 50)]
+    )
+    np.testing.assert_array_equal(parts, np.asarray(w))
+
+
+def test_scripted_schedule_mixed_episode_counts():
+    # Rows with fewer episodes than K must pad *after* the real episodes
+    # with a sorted sentinel — (0, 0) padding broke searchsorted membership.
+    sched = FLT.schedule_from_episodes(
+        2, rack=[(0, 100, 200), (0, 300, 400), (1, 50, 60)]
+    )
+    down = np.asarray(FLT.rack_down(sched, 0, 500))
+    assert down[150, 0] and down[350, 0] and not down[250, 0]
+    assert down[55, 1] and not down[65, 1]
+    assert not down[150, 1]
+
+
+def test_render_sensor_dropout_is_nan():
+    s = _faulty_campus()
+    tr = np.asarray(SC.render(s, 0, s.total_samples))
+    dead = np.asarray(FLT.sensor_down(s.faults, 0, s.total_samples))
+    assert np.any(dead), "schedule produced no sensor outage"
+    assert np.all(np.isnan(tr[dead]))
+    assert np.all(np.isfinite(tr[~dead]))
+
+
+def test_faulty_render_chunk_bitwise():
+    s = _faulty_campus()
+    whole = np.asarray(SC.render(s, 0, s.total_samples))
+    chunk = 700  # deliberately not a divisor of the total
+    parts = np.concatenate([
+        np.asarray(SC.render(s, t0, min(chunk, s.total_samples - t0)))
+        for t0 in range(0, s.total_samples, chunk)
+    ])
+    np.testing.assert_array_equal(whole, parts)
+
+
+def test_attach_faults_rejects_rack_mismatch():
+    s = SC.mixed_campus(
+        4, ("llama3_2_1b",), duration_s=20.0, sample_hz=_HZ, seed=0
+    )
+    sched = FLT.sample_schedule(_proc(), 7, s.total_samples, _HZ, seed=0)
+    with pytest.raises(ValueError):
+        SC.attach_faults(s, sched)
+
+
+def test_workload_validates_fault_params():
+    with pytest.raises(ValueError):
+        SC.workload(fault_duration_s=-1.0)
+    with pytest.raises(ValueError):
+        SC.workload(fault_at_s=-3.0)
+
+
+def test_make_scenario_rejects_fault_past_end():
+    w = SC.workload(fault_at_s=100.0)
+    with pytest.raises(ValueError):
+        SC.make_scenario(w, duration_s=50.0, sample_hz=_HZ)
+
+
+# ----------------------------------------------- degraded-mode conditioning
+
+
+def test_degraded_clean_trace_matches_plain_bitwise():
+    """degraded_mode with no faults and no mask is the identity refactor:
+    every output must match the non-degraded config bit-for-bit."""
+    s = SC.mixed_campus(
+        4, ("llama3_2_1b", "qwen1_5_4b"), duration_s=30.0, sample_hz=_HZ, seed=2
+    )
+    tr = SC.render(s, 0, s.total_samples)
+    plain = pdu.make_pdu(sample_dt=1.0 / _HZ)
+    deg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    g0, st0, _ = pdu.condition(plain, pdu.init_state(plain, tr[0]), tr, qp_iters=20)
+    g1, st1, te = pdu.condition(deg, pdu.init_state(deg, tr[0]), tr, qp_iters=20)
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    np.testing.assert_array_equal(
+        np.asarray(st0.ess_state.soc), np.asarray(st1.ess_state.soc)
+    )
+    np.testing.assert_array_equal(np.asarray(te.ess_online), 1.0)
+
+
+def test_degraded_offline_rack_is_lc_passthrough():
+    """An offline rack sheds no battery power: SoC frozen, zero command."""
+    s = SC.mixed_campus(
+        4, ("llama3_2_1b", "qwen1_5_4b"), duration_s=30.0, sample_hz=_HZ, seed=2
+    )
+    tr = SC.render(s, 0, s.total_samples)
+    deg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    st = pdu.init_state(deg, tr[0])
+    mask = jnp.asarray([0.0, 1.0, 1.0, 1.0])
+    _, st_f, te = pdu.condition(deg, st, tr, qp_iters=20, ess_online=mask)
+    np.testing.assert_array_equal(
+        np.asarray(st_f.ess_state.soc[0]), np.asarray(st.ess_state.soc[0])
+    )
+    np.testing.assert_array_equal(np.asarray(te.command[:, 0]), 0.0)
+    assert np.any(np.asarray(te.command[:, 1:]) != 0.0)
+
+
+def test_degraded_bridges_nan_and_trips_blind_intervals():
+    """NaN sensor samples never reach outputs; a rack dark for a whole
+    interval is forced offline by the finite-guard tripwire."""
+    s = _faulty_campus()
+    tr = SC.render(s, 0, s.total_samples)
+    assert bool(jnp.any(jnp.isnan(tr)))
+    deg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    grid, st_f, te = pdu.condition(deg, pdu.init_state(deg, tr[0]), tr, qp_iters=20)
+    assert bool(jnp.all(jnp.isfinite(grid)))
+    assert bool(jnp.all(jnp.isfinite(te.rack_mean)))
+    k = int(round(float(deg.controller.dt) * _HZ))
+    dead = np.asarray(FLT.sensor_down(s.faults, 0, s.total_samples))
+    n_ctrl = te.ess_online.shape[0]
+    blind = dead[: n_ctrl * k].reshape(n_ctrl, k, -1).all(axis=1)
+    assert np.any(blind), "schedule produced no fully-blind interval"
+    np.testing.assert_array_equal(np.asarray(te.ess_online)[blind], 0.0)
+
+
+def test_degraded_condition_chunked_matches_whole_bitwise():
+    s = _faulty_campus()
+    tr = SC.render(s, 0, s.total_samples)
+    deg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    k = int(round(float(deg.controller.dt) * _HZ))
+    n_ctrl = -(-s.total_samples // k)
+    on = FLT.interval_online(s.faults, 0, n_ctrl, k)
+
+    g_whole, st_whole, _ = pdu.condition(
+        deg, pdu.init_state(deg, tr[0]), tr, qp_iters=20, ess_online=on
+    )
+    st = pdu.init_state(deg, tr[0])
+    parts = []
+    chunk = 4 * k
+    for t0 in range(0, s.total_samples, chunk):
+        n = min(chunk, s.total_samples - t0)
+        rows = on[t0 // k : t0 // k + -(-n // k)]
+        g, st, _ = pdu.condition(deg, st, tr[t0 : t0 + n], qp_iters=20, ess_online=rows)
+        parts.append(np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(g_whole), np.concatenate(parts))
+    for la, lb in zip(
+        jax.tree_util.tree_leaves(st_whole), jax.tree_util.tree_leaves(st)
+    ):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_ess_online_requires_degraded_mode():
+    plain = pdu.make_pdu(sample_dt=1.0 / _HZ)
+    tr = jnp.ones((200, 3), jnp.float32) * 0.5
+    with pytest.raises(ValueError):
+        pdu.condition(
+            plain, pdu.init_state(plain, tr[0]), tr, ess_online=jnp.ones((3,))
+        )
+
+
+def test_apply_failures_matches_fault_engine():
+    """The legacy helper is now a shim over the schedule machinery."""
+    traces = jnp.ones((100, 3), jnp.float32) * 0.8
+    out = np.asarray(
+        __import__("repro.core.fleet", fromlist=["fleet"]).apply_failures(
+            traces, jnp.asarray([-1, 40, 70]), p_idle=0.1
+        )
+    )
+    assert np.all(out[:, 0] == np.float32(0.8))
+    assert np.all(out[:40, 1] == np.float32(0.8)) and np.all(
+        out[40:, 1] == np.float32(0.1)
+    )
+    assert np.all(out[70:, 2] == np.float32(0.1))

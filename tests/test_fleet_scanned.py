@@ -279,3 +279,151 @@ def test_shard_racks_in_jit_single_device_is_noop():
     np.testing.assert_allclose(
         np.asarray(a.campus_grid), np.asarray(b.campus_grid), atol=_ULP
     )
+
+
+# ----------------------------------------------- degraded mode (ISSUE 6)
+
+
+def _faulty_campus(n_racks=5, duration_s=40.0, seed=2):
+    from repro.power import faults as FLT
+
+    s = _campus(n_racks=n_racks, duration_s=duration_s, seed=seed)
+    proc = FLT.FaultProcess.create(
+        rack_mtbf_s=30.0, rack_mttr_s=10.0,
+        ess_mtbf_s=25.0, ess_mttr_s=8.0,
+        sensor_mtbf_s=20.0, sensor_mttr_s=4.0,
+    )
+    return SC.attach_faults(s, proc, seed=13)
+
+
+def _deg_cfg():
+    return pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+
+
+def test_faulty_scenario_requires_degraded_mode():
+    s = _faulty_campus()
+    with pytest.raises(ValueError):
+        fleet.condition_scenario_scanned(_cfg(), s, _SPEC)
+    with pytest.raises(ValueError):
+        fleet.condition_scenario_streaming(_cfg(), s, _SPEC, engine="host")
+
+
+@pytest.mark.slow
+def test_degraded_engines_match_under_stochastic_schedule():
+    """scanned == host == one-shot under a stochastic fault schedule, to
+    the repo's standing tolerance contract (rack/soc/mask aggregates
+    bitwise; filter-chain outputs within FMA-contraction slack)."""
+    from repro.power import faults as FLT
+
+    s = _faulty_campus()
+    cfg = _deg_cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=20, chunk_intervals=2)
+    b = fleet.condition_scenario_streaming(
+        cfg, s, _SPEC, engine="host", qp_iters=20, chunk_intervals=2
+    )
+    _assert_results_match(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(a.ess_online_frac), np.asarray(b.ess_online_frac)
+    )
+    _assert_states_match(a.state, b.state)
+
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    n_ctrl = -(-s.total_samples // k)
+    on = FLT.interval_online(s.faults, 0, n_ctrl, k)
+    wt = FLT.ess_weight(s.faults, 0, s.total_samples, s.edge_width)
+    tr = SC.render(s, 0, s.total_samples)
+    res = fleet.condition_fleet(
+        cfg, tr, _SPEC, qp_iters=20, ess_online=on, ess_weight=wt
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.campus_rack), np.asarray(res.campus_rack)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.ess_online_frac), np.asarray(res.ess_online_frac)
+    )
+    np.testing.assert_allclose(
+        np.asarray(a.campus_grid), np.asarray(res.campus_grid), atol=1e-5
+    )
+    # masks really tripped something, and every output stayed finite
+    assert float(np.asarray(a.ess_online_frac).min()) < 1.0
+    assert np.all(np.isfinite(np.asarray(a.campus_grid)))
+    assert np.all(np.isfinite(np.asarray(a.campus_rack)))
+
+
+def test_degraded_fault_on_chunk_boundary():
+    """A deterministic ESS outage whose edges land exactly on chunk
+    boundaries must render identically at any chunking."""
+    from repro.power import faults as FLT
+
+    s = _campus(n_racks=4, duration_s=24.0)
+    k = int(round(5.0 * _HZ))  # controller interval in samples
+    chunk = 2 * k
+    sched = FLT.schedule_from_episodes(
+        4, ess=[(1, chunk, 2 * chunk), (2, 2 * chunk, 3 * chunk)],
+        sensor=[(3, chunk, chunk + k)],
+    )
+    s = SC.attach_faults(s, sched)
+    cfg = _deg_cfg()
+    a = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=2)
+    b = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=15, chunk_intervals=4)
+    _assert_results_match(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(a.ess_online_frac), np.asarray(b.ess_online_frac)
+    )
+    # the scheduled outage shows in the mask at exactly the right intervals:
+    # interval 2 has rack 1's ESS tripped AND rack 3 measurement-blind
+    # (finite-guard), then rack 1 alone, then rack 2 alone.
+    np.testing.assert_array_equal(
+        np.asarray(a.ess_online_frac), [1.0, 1.0, 0.5, 0.75, 0.75]
+    )
+
+
+@pytest.mark.slow
+def test_degraded_resume_mid_outage():
+    """Stop/resume inside an active fault episode: the glued stream must be
+    bitwise identical to the uninterrupted run (mask and bridge state are
+    pure in the absolute sample index; last_good rides in PDUState)."""
+    s = _faulty_campus()
+    cfg = _deg_cfg()
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    full = fleet.condition_scenario_scanned(cfg, s, _SPEC, qp_iters=20, chunk_intervals=2)
+    cut = 4 * k  # resume point: interval-aligned, inside the fault soup
+    a = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=20, chunk_intervals=2, stop_sample=cut
+    )
+    b = fleet.condition_scenario_scanned(
+        cfg, s, _SPEC, qp_iters=20, chunk_intervals=2,
+        state=a.state, start_sample=cut,
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(a.campus_rack), np.asarray(b.campus_rack)]),
+        np.asarray(full.campus_rack),
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(a.ess_online_frac), np.asarray(b.ess_online_frac)]),
+        np.asarray(full.ess_online_frac),
+    )
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(a.soc_mean), np.asarray(b.soc_mean)]),
+        np.asarray(full.soc_mean),
+    )
+
+
+def test_fleet_summary_json_safe_round_trip():
+    """An untracked config's infinite projected life must JSON-serialize
+    under allow_nan=False once clamped."""
+    import json
+
+    from repro.core import health as hlt
+
+    s = _campus(n_racks=3, duration_s=20.0)
+    cfg = _cfg()  # track_health off -> empty history -> inf lifetime
+    tr = SC.render(s, 0, s.total_samples)
+    res = fleet.condition_fleet(cfg, tr, _SPEC, qp_iters=10)
+    raw = hlt.fleet_summary(res.health)
+    assert raw["projected_life_years_min"] == float("inf")
+    with pytest.raises(ValueError):
+        json.dumps(raw, allow_nan=False)
+    safe = hlt.fleet_summary(res.health, json_safe=True)
+    assert safe["projected_life_years_min"] is None
+    assert json.loads(json.dumps(safe, allow_nan=False)) == safe
