@@ -37,7 +37,7 @@ def bench_lc_filter():
     return "kernel_lc_filter", us, f"{samples_per_s/1e6:.1f}M rack-samples/s (60s x 128 racks @1kHz)"
 
 
-def bench_pdu_sim_fused():
+def _pdu_sim_problem():
     s = sizing.size_system(sizing.prototype_rack(), beta=0.0625)
     pp = per_unit_filter(s, sizing.prototype_rack())
     filt = filters.make_discrete_filter(pp, 1e-3)
@@ -46,11 +46,33 @@ def bench_pdu_sim_fused():
     x0 = jnp.tile(filters.steady_state(filt, jnp.array([1.0, 0.5])), (r, 1))
     kw = dict(beta=0.0625, dt=1e-3, q_max=40.0, eta_c=0.97, eta_d=0.97,
               p_max=1.0, soc_min=0.1, soc_max=0.9)
+    return filt, t, r, u, x0, kw
+
+
+def bench_pdu_sim_fused():
+    """Unmasked variant: every ESS healthy (no availability weight)."""
+    filt, t, r, u, x0, kw = _pdu_sim_problem()
     corr = jnp.zeros((t, r))
     f = jax.jit(lambda uu: ops.pdu_sim(uu, uu[0], jnp.full((r,), 0.5), x0,
                                        filt.ad, filt.bd, filt.c[0], corr, **kw)[0])
     us, _ = _timeit(f, u)
     return "kernel_pdu_sim", us, f"{t*r/(us/1e6)/1e6:.1f}M rack-samples/s fused (1 HBM pass)"
+
+
+def bench_pdu_sim_masked():
+    """Masked variant: time-varying (T, R) availability weight — the
+    degraded-mode path (failures + fractional wind-down ramps)."""
+    filt, t, r, u, x0, kw = _pdu_sim_problem()
+    corr = jnp.zeros((t, r))
+    # ~12% of racks degraded, with a fractional ramp over the first 4s
+    mask = (jax.random.uniform(jax.random.key(7), (r,)) > 0.12).astype(jnp.float32)
+    ramp = jnp.clip(jnp.arange(t, dtype=jnp.float32)[:, None] / 4000.0, 0.0, 1.0)
+    ess_on = mask[None, :] + (1.0 - mask[None, :]) * (1.0 - ramp)
+    f = jax.jit(lambda uu, w: ops.pdu_sim(uu, uu[0], jnp.full((r,), 0.5), x0,
+                                          filt.ad, filt.bd, filt.c[0], corr,
+                                          ess_on=w, **kw)[0])
+    us, _ = _timeit(f, u, ess_on)
+    return "kernel_pdu_sim_masked", us, f"{t*r/(us/1e6)/1e6:.1f}M rack-samples/s with (T,R) weight"
 
 
 def bench_attention():
@@ -63,6 +85,23 @@ def bench_attention():
     us, _ = _timeit(f, q, k, v)
     fl = 4 * b * h * t * t * d / 2  # causal half
     return "kernel_attention", us, f"{fl/(us/1e6)/1e9:.1f} GFLOP/s host-ref (TPU target: Pallas)"
+
+
+def bench_attention_bwd():
+    """Forward + backward through ops.attention (host path: XLA autodiff;
+    TPU target: the fused FlashAttention-2 dK/dV + dQ Pallas kernels)."""
+    b, h, t, d = 4, 8, 1024, 64
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = jax.random.normal(ks[0], (b, h, t, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, h, t, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, h, t, d), jnp.float32)
+    f = jax.jit(jax.grad(
+        lambda a, b2, c: jnp.sum(ops.attention(a, b2, c, causal=True)),
+        argnums=(0, 1, 2),
+    ))
+    us, _ = _timeit(f, q, k, v)
+    fl = (4 + 8) * b * h * t * t * d / 2  # fwd + ~2x bwd, causal half
+    return "kernel_attention_bwd", us, f"{fl/(us/1e6)/1e9:.1f} GFLOP/s host-ref fwd+bwd"
 
 
 def bench_rwkv6():
@@ -96,5 +135,6 @@ def bench_gemm_burn():
     return "kernel_gemm_burn", us, f"{fl/(us/1e6)/1e9:.1f} GFLOP/s burned (duty-cycle knob x4)"
 
 
-ALL = [bench_lc_filter, bench_pdu_sim_fused, bench_attention, bench_rwkv6,
+ALL = [bench_lc_filter, bench_pdu_sim_fused, bench_pdu_sim_masked,
+       bench_attention, bench_attention_bwd, bench_rwkv6,
        bench_rmsnorm, bench_gemm_burn]

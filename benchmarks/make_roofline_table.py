@@ -1,4 +1,7 @@
-"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables."""
+"""Render the dry-run JSON records into the EXPERIMENTS.md roofline tables,
+plus the structural roofline of the repo's Pallas kernels (analytic
+FLOPs / HBM bytes per call at the bench shapes — what decides
+memory-vs-compute bound on the TPU target, independent of this host)."""
 import glob
 import json
 import sys
@@ -31,6 +34,63 @@ def table(mesh_tag: str) -> str:
     return "\n".join(lines)
 
 
+def kernel_rows():
+    """(name, shape, flops/call, hbm bytes/call) for each Pallas kernel at
+    its kernel_benches.py shape.  Analytic counts: per-element op counts
+    read off the kernel bodies, HBM traffic = operands each kernel actually
+    streams (VMEM-resident state/scratch excluded — that is the point)."""
+    rows = []
+    t, r = 60_000, 128  # lc_filter / pdu_sim bench shape
+    # LC 3-state filter: ad@x (18) + bd*u (6) + c@x (6) per rack-sample.
+    rows.append(("lc_filter", f"T={t} R={r}", 30 * t * r, (t * r * 2) * 4))
+    # Fused pdu_sim: ESS ramp/clip/soc (~14) + LC (30) per rack-sample;
+    # streams u + corrective in, grid + soc out.
+    rows.append(("pdu_sim", f"T={t} R={r}", 44 * t * r, (t * r * 4) * 4))
+    # Interval-resident megakernel: pdu_sim math + in-kernel slew render
+    # (4) + health turning-point fold (~25) per rack-sample; the slew pair
+    # replaces the (T, R) corrective stream, so HBM is ONE read (trace) +
+    # two writes (grid, soc) — wear state never leaves VMEM.
+    ti, ri = 1000, 1024  # one 5 s controller interval @ 200 Hz, campus width
+    rows.append(("pdu_health (megakernel)", f"T={ti} R={ri}",
+                 73 * ti * ri, (ti * ri * 3) * 4))
+    # Batched ADMM step: per iter per rack the stacked K^-1 GEMM
+    # 2n(n+m) + the constraint GEMM 2(m-2h)n + ~6m+2n vector ops, with
+    # x/z/y and the plan matrices VMEM-resident across all iters; HBM is
+    # the one-time operand read + final x/z/y write.
+    h, iters = 12, 30
+    n, m = h, 3 * h
+    per_iter = 2 * n * (n + m) + 2 * (m - 2 * h) * n + 6 * m + 2 * n
+    rows.append(("admm_step (batched)", f"h={h} iters={iters} R={ri}",
+                 per_iter * iters * ri,
+                 ((n + m) * (n + n + m) + (n + 5 * m) * ri + 3 * m * ri) * 4))
+    # FlashAttention-2 forward: 4·t²·d FLOPs (qk^T + pv), causal half.
+    b, hh, tt, d = 4, 8, 1024, 64
+    fa_f = 4 * b * hh * tt * tt * d // 2
+    fa_io = b * hh * tt * d * 4
+    rows.append(("flash_attention fwd", f"B={b} H={hh} T={tt} D={d}",
+                 fa_f, 4 * fa_io))
+    # Backward (dK/dV + dQ kernels): ~2x forward FLOPs, streams q/k/v/o/do
+    # + lse/delta in, dq/dk/dv out; tiles revisit HBM once per pass.
+    rows.append(("flash_attention bwd", f"B={b} H={hh} T={tt} D={d}",
+                 2 * fa_f, 8 * fa_io))
+    return rows
+
+
+def kernel_table() -> str:
+    lines = [
+        "| kernel | bench shape | GFLOP/call | HBM MB/call | FLOP/byte |",
+        "|---|---|---|---|---|",
+    ]
+    for name, shape, fl, by in kernel_rows():
+        lines.append(
+            f"| {name} | {shape} | {fmt(fl / 1e9)} | {fmt(by / 1e6, 1)} | "
+            f"{fmt(fl / by, 1)} |"
+        )
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     tag = sys.argv[1] if len(sys.argv) > 1 else "16_16"
     print(table(tag))
+    print("\n## Pallas kernel structural roofline\n")
+    print(kernel_table())

@@ -453,6 +453,36 @@ def bench_mixed_campus_health():
     run()  # compile
     us, res = _best_of(run, lambda r: r.campus_grid)
     UNITS["mixed_campus_health"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
+
+    if QUICK:
+        # Megakernel-vs-ref agreement ride-along: one controller interval of
+        # THIS campus through the interpret-mode Pallas megakernel vs the
+        # jnp reference the engines run on CPU.  SoC path + every health
+        # leaf bitwise, grid bitwise on the (sublane-aligned) interval.
+        from repro.core import health as _h
+        from repro.kernels import ops as _ops, ref as _kref
+
+        k = int(round(cfg.controller.dt * hz))
+        chunk = jax.jit(lambda: SC.render(s, 0, k))()
+        st = pdu.init_state(cfg, chunk[0])
+        ep = cfg.ess_params
+        kkw = dict(
+            beta=float(ep.beta), dt=1.0 / hz, q_max=float(ep.q_max),
+            eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+            p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+            soc_max=float(ep.soc_safe_max),
+        )
+        filt = st.filter_obj
+        a = (chunk, st.ess_state.g_filter, st.ess_state.soc, st.filter_state,
+             filt.ad, filt.bd, filt.c[0])
+        hin = (_h.step_consts(cfg.health), tuple(st.health))
+        r_ref = _kref.pdu_health_sim(*a, health=hin, **kkw)
+        r_pl = _ops.pdu_health_sim(*a, health=hin, force="pallas", **kkw)
+        np.testing.assert_array_equal(np.asarray(r_ref[1]), np.asarray(r_pl[1]))
+        np.testing.assert_array_equal(np.asarray(r_ref[0]), np.asarray(r_pl[0]))
+        for lf_r, lf_p in zip(r_ref[3], r_pl[3]):
+            np.testing.assert_array_equal(np.asarray(lf_r), np.asarray(lf_p))
+
     base = LAST_US.get("mixed_campus_fleet")
     overhead = f"{(us / base - 1) * 100:+.1f}%" if base else "-"
     h = hlt.fleet_summary(res.health)
@@ -462,6 +492,7 @@ def bench_mixed_campus_health():
         f"worst_dod={h['worst_dod']:.3f} fade_max={h['fade_max']:.2e} "
         f"life_min={h['projected_life_years_min']:.1f}y "
         f"hf_lines_ok={bool(res.report_grid.spectrum_ok)}"
+        + (" megakernel_agrees=True" if QUICK else "")
     )
 
 

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.ess import ESSParams
+from repro.kernels import ops
 from repro.utils import pytree_dataclass, static_field
 
 
@@ -438,15 +439,15 @@ def solve_qp_admm_plan(
         x0, z0, y0 = warm.x, warm.z, warm.y
     kq = plan.kkt_inv @ q  # state-only: constant across iterations
 
-    def body(carry, _):
-        x, z, y = carry
-        x_new = plan.kkt_inv_sigma @ x + plan.kkt_inv_at @ (rho * z - y) - kq
-        ax = a_mat @ x_new
-        z_new = jnp.clip(ax + y / rho, lo, hi)
-        y_new = y + rho * (ax - z_new)
-        return (x_new, z_new, y_new), None
-
-    (x, z, y), _ = jax.lax.scan(body, (x0, z0, y0), None, length=iters)
+    # Fused iteration loop (ops.admm_iterate): the stacked x-update GEMM
+    # and the structure-exploiting A x (A = [I; G]) — one Pallas kernel on
+    # TPU, the jnp reference elsewhere.  The stacked operand is loop-
+    # invariant; XLA hoists the concatenate out of the iteration scan.
+    kkt_stack = jnp.concatenate([plan.kkt_inv_sigma, plan.kkt_inv_at], axis=1)
+    x, z, y = ops.admm_iterate(
+        kkt_stack, a_mat[2 * plan.horizon :], kq, lo, hi, x0, z0, y0,
+        rho=rho, iters=iters,
+    )
     ax = a_mat @ x
     primal = jnp.max(jnp.abs(ax - jnp.clip(ax, lo, hi)), axis=0)
     dual = jnp.max(jnp.abs(plan.p_mat @ x + q + a_mat.T @ y), axis=0)

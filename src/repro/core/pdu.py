@@ -168,8 +168,17 @@ class Telemetry(NamedTuple):
     command: jax.Array  # corrective power commanded per interval
     target: jax.Array  # outer-loop SoC target per interval
     qp_residual: jax.Array  # QP primal residual per interval (0 if sw off)
-    # Degraded-mode extras (None unless cfg.degraded_mode):
-    rack_mean: jax.Array = None  # (T,) per-sample mean of the *bridged* trace
+    # Campus means, computed INSIDE the interval scan from its materialized
+    # operands.  A top-level ``jnp.mean(rack_power)`` next to the scan gives
+    # XLA a second consumer of the rendered chunk, and its fusion pass
+    # duplicates the whole producer chain (measured: the noise transform
+    # ran twice per chunk in the scanned engine's fused jit) — reducing
+    # over the scan's xs/output buffers instead keeps the producer
+    # single-consumer while yielding bitwise-identical values (the rack
+    # reduction of row t does not depend on which rows share the array).
+    rack_mean: jax.Array = None  # (T,) mean of the (bridged) input trace
+    grid_mean: jax.Array = None  # (T,) mean of the conditioned grid trace
+    # Degraded-mode extra (None unless cfg.degraded_mode):
     ess_online: jax.Array = None  # (n_ctrl, ...) effective availability mask
 
 
@@ -315,8 +324,6 @@ def condition(
 
     filt = state.filter_obj
     meas_w = min(float(cfg.controller.dt) / float(cfg.controller.meas_tau), 1.0)
-    batch_ndim = rack_power.ndim - 1
-    ramp01 = jnp.arange(1, k + 1, dtype=jnp.float32).reshape((k,) + (1,) * batch_ndim) / k
 
     ep = cfg.ess_params
     # Factor-once plan: P, A and the KKT Cholesky depend only on config, so
@@ -342,43 +349,50 @@ def condition(
         else:
             rack_chunk = xs
 
-        # --- hardware path: fused ESS + SoC + LC simulation --------------
-        # (single pass; Pallas kernel on TPU, fused scan elsewhere —
-        # 1.6x wall clock over the staged pipeline, EXPERIMENTS §Perf-1)
-        corr_profile = cmd_applied + (cmd_target - cmd_applied) * ramp01  # (k, ...)
+        # --- hardware path: interval-resident megakernel -----------------
+        # One call simulates the whole interval: fused ESS + SoC + LC
+        # (1.6x over the staged pipeline, EXPERIMENTS §Perf-1), with the
+        # corrective-command slew rendered per step from the (applied,
+        # target) rows — the (k, R) ramp profile is never materialized —
+        # and, when track_health, the battery-wear fold computed in the
+        # same launch (Pallas kernel on TPU keeps all of it in VMEM;
+        # the jnp reference preserves the bitwise fold contract, see
+        # ref.pdu_health_sim / EXPERIMENTS §Perf-7).
         batched = rack_chunk.ndim > 1
         lift = (lambda x: x) if batched else (lambda x: x[None])
         rc = rack_chunk if batched else rack_chunk[:, None]
-        cp = corr_profile if batched else corr_profile[:, None]
         g0, s0, xf0 = lift(es.g_filter), lift(es.soc), lift(x_f)
         if degraded:
             hw = jnp.broadcast_to(hw_chunk, (k,) + batch)
             mask_kw = dict(ess_on=hw if batched else hw[:, None])
         else:
             mask_kw = {}
-        grid, soc_path, (g_f, soc_f, x_new) = ops.pdu_sim(
-            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0], cp, **mask_kw, **hw_kw
+        if cfg.track_health:
+            health_in = (hconsts, tuple(lift(leaf) for leaf in hstate))
+        else:
+            health_in = None
+        grid, _soc_path, (g_f, soc_f, x_new), h_leaves = ops.pdu_health_sim(
+            rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0],
+            slew=(lift(cmd_applied), lift(cmd_target)),
+            health=health_in, **mask_kw, **hw_kw,
         )
+        # Campus means over the scan-resident buffers (see Telemetry).
+        rack_mean_row = jnp.mean(rc, axis=1)
+        grid_mean_row = jnp.mean(grid, axis=1)
         if not batched:
             grid, g_f, soc_f, x_new = grid[:, 0], g_f[0], soc_f[0], x_new[0]
-            soc_path = soc_path[:, 0]
+            if cfg.track_health:
+                h_leaves = tuple(leaf[0] for leaf in h_leaves)
         es2 = ess.ESSState(g_filter=g_f, soc=soc_f)
         x_f2 = x_new
 
-        # --- health telemetry: fold the interval's SoC path --------------
-        # (pure observation: grid/SoC outputs untouched.  A second scan
-        # over the kernel's SoC output is the profiled optimum: folding
-        # the 9 wear carries INTO the pdu_sim scan spills its L1 working
-        # set at fleet width — measured 3x slower — and hoisting the fold
-        # out of the interval scan forces a (T, R) SoC materialization
-        # that costs more than the nested scan saves.)
+        # --- health telemetry (folded inside the megakernel) --------------
         if cfg.track_health:
-            hstate2 = hlt.update_consts(hconsts, hstate, soc_path)
+            hstate2 = hlt.HealthState(*h_leaves)
             # Wear feedback reads the PRE-interval state: one control
             # interval (5 s) of staleness is nothing on aging timescales,
             # and it takes the wear fold off the controller's critical
-            # path (the fold and the QP chain only share pdu_sim's
-            # outputs, so the runtime can overlap them).
+            # path.
             wear = hlt.cycle_life_fraction(cfg.health, hstate)
         else:
             hstate2 = hstate
@@ -427,11 +441,13 @@ def condition(
 
         telem = (
             es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape), resid,
+            # In degraded mode this is the mean of the *bridged* trace (NaN
+            # never reaches campus aggregates).
+            rack_mean_row, grid_mean_row,
         )
         if degraded:
-            # Campus mean of the *bridged* trace (NaN never reaches campus
-            # aggregates) and the mask actually applied this interval.
-            telem = telem + (jnp.mean(rc, axis=1), on_row)
+            # The mask actually applied this interval.
+            telem = telem + (on_row,)
         carry2 = (
             x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
             warm2, hstate2, step_idx + 1,
@@ -456,13 +472,11 @@ def condition(
         qp_warm=warm_f, health=h_f,
         ess_online=state.ess_online, last_good=last_good2,
     )
-    extra = {}
-    if degraded:
-        extra = dict(
-            rack_mean=telem[4].reshape((n_ctrl * k,))[:t], ess_online=telem[5]
-        )
+    extra = dict(ess_online=telem[6]) if degraded else {}
     return grid, new_state, Telemetry(
         soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3],
+        rack_mean=telem[4].reshape((n_ctrl * k,))[:t],
+        grid_mean=telem[5].reshape((n_ctrl * k,))[:t],
         **extra,
     )
 
@@ -514,14 +528,16 @@ def condition_campus(
     if cfg.degraded_mode:
         # The raw chunk may carry NaN sensor dropouts; the bridged mean
         # from the conditioning scan is the honest campus-load signal.
-        campus_rack = telem.rack_mean
         on_frac = jnp.mean(telem.ess_online, axis=1)
     else:
-        campus_rack = jnp.mean(rack_power, axis=1)
         on_frac = jnp.ones(telem.soc.shape[0], jnp.float32)
+    # Means come from inside the conditioning scan (see Telemetry): values
+    # are bitwise-identical to reducing the (T, R) blocks here, but the
+    # rendered chunk keeps a single consumer (no producer duplication) and
+    # a campus-only engine never reads the (T, R) grid block at all.
     return state2, CampusChunk(
-        campus_rack=campus_rack,
-        campus_grid=jnp.mean(grid, axis=1),
+        campus_rack=telem.rack_mean,
+        campus_grid=telem.grid_mean,
         soc_mean=jnp.mean(telem.soc, axis=1),
         max_qp_residual=jnp.max(telem.qp_residual),
         health=hsnap,

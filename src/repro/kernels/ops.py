@@ -13,9 +13,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.kernels import admm_step as _ad
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gemm_burn as _gb
 from repro.kernels import lc_filter as _lc
+from repro.kernels import pdu_health as _ph
 from repro.kernels import pdu_sim as _pd
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import rwkv6_scan as _rw
@@ -67,12 +69,60 @@ def pdu_sim(rack_power, g0, soc0, x0, ad, bd, c_row, corrective, *, force=None, 
     )
 
 
-def attention(q, k, v, *, causal=True, scale=None, force=None, **kw):
+def pdu_health_sim(
+    rack_power, g0, soc0, x0, ad, bd, c_row, *, health=None, force=None, **kw
+):
+    """Interval-resident conditioning megakernel: ``pdu_sim`` + in-kernel
+    command slew (``slew=(applied, target)``) + fused battery-health fold
+    (``health=(step_consts, state_leaves)``).  One launch per controller
+    interval; see ``ref.pdu_health_sim`` for the exact semantics and the
+    bitwise contract."""
     use, interp = _mode(force)
     if use:
-        return _fa.flash_attention(
-            q, k, v, causal=causal, scale=scale, interpret=interp, **kw
+        hc, hs = health if health is not None else (None, None)
+        return _ph.pdu_health_sim(
+            rack_power, g0, soc0, x0, ad, bd, c_row,
+            health_consts=hc, health_state=hs, interpret=interp, **kw,
         )
+    return _ref.pdu_health_sim(
+        rack_power, g0, soc0, x0, ad, bd, c_row, health=health, **kw
+    )
+
+
+def admm_iterate(
+    kkt_stack, g_blk, kq, lo, hi, x0, z0, y0, *, rho, iters, force=None, **kw
+):
+    """Fused batched-ADMM iteration loop for the prefactorized controller
+    QP (see ``ref.admm_iterate``).  The Pallas kernel needs a rack batch
+    in the trailing axis; unbatched solves take the reference path."""
+    use, interp = _mode(force)
+    if use and kq.ndim == 2:
+        return _ad.admm_iterate(
+            kkt_stack, g_blk, kq, lo, hi, x0, z0, y0,
+            rho=rho, iters=iters, interpret=interp, **kw,
+        )
+    return _ref.admm_iterate(
+        kkt_stack, g_blk, kq, lo, hi, x0, z0, y0, rho=rho, iters=iters
+    )
+
+
+def attention(q, k, v, *, causal=True, scale=None, force=None, algorithm="auto", **kw):
+    """Softmax attention with GQA.  Differentiable on every path:
+    the Pallas route pairs the online-softmax forward with the fused
+    FlashAttention-2 backward kernels (``algorithm="auto"``) or the dense
+    lse-based jnp backward (``"reference"``, the oracle); sequences the
+    256-tiles do not divide — and the host path — fall back to
+    ``ref.attention`` (plain XLA autodiff)."""
+    use, interp = _mode(force)
+    if use:
+        bq = kw.get("block_q", 256)
+        bk = kw.get("block_k", 256)
+        tq, tk = q.shape[2], k.shape[2]
+        if tq % min(bq, tq) == 0 and tk % min(bk, tk) == 0:
+            return _fa.flash_attention(
+                q, k, v, causal=causal, scale=scale, interpret=interp,
+                algorithm=algorithm, **kw
+            )
     return _ref.attention(q, k, v, causal=causal, scale=scale)
 
 

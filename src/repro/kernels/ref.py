@@ -131,6 +131,217 @@ def pdu_sim(
     return grid, soc_t, (g_f, soc_f, x_f)
 
 
+# ------------------------------------------------------------- pdu_health_sim
+
+
+def pdu_health_sim(
+    rack_power: jax.Array,  # (T, R)
+    g0: jax.Array,  # (R,)
+    soc0: jax.Array,  # (R,)
+    x0: jax.Array,  # (R, 3)
+    ad: jax.Array,
+    bd: jax.Array,
+    c_row: jax.Array,
+    *,
+    beta: float,
+    dt: float,
+    q_max: float,
+    eta_c: float,
+    eta_d: float,
+    p_max: float,
+    soc_min: float,
+    soc_max: float,
+    corrective: jax.Array | float = 0.0,  # scalar or (T, R)
+    slew: tuple[jax.Array, jax.Array] | None = None,  # (applied, target) rows
+    ess_on: jax.Array | None = None,  # (R,) or (T, R) availability weight
+    health: tuple | None = None,  # ((c0, c1, eps, kappa), state_leaves)
+) -> tuple[jax.Array, jax.Array, tuple, tuple | None]:
+    """One-call oracle for the interval-resident conditioning megakernel.
+
+    Extends ``pdu_sim`` with the two fusions the megakernel performs per
+    controller interval:
+
+    * **In-scan command slew** — ``slew=(applied, target)`` renders the
+      corrective-power ramp ``applied + (target - applied) * (t+1)/T``
+      per step from two ``(R,)`` rows instead of consuming a materialized
+      ``(T, R)`` profile.  Each element evaluates the identical fused
+      expression, so the output is bitwise equal to passing the broadcast
+      profile via ``corrective`` (and to the pre-fusion pipeline).
+    * **Fused health fold** — ``health=(step_consts, state_leaves)`` folds
+      the battery-wear telemetry of ``core.health.update_consts`` in the
+      same call: the 5-carry turning-point machine rides its own scan and
+      the throughput/stress integrals stay whole-interval ``jnp.sum``
+      block reductions over the simulated SoC path.  Every leaf is
+      bitwise identical to ``update_consts`` on ``pdu_sim``'s SoC output
+      (this reference keeps that hybrid formulation verbatim — it is the
+      profiled CPU optimum); the Pallas megakernel instead carries the
+      previous sample through its single step loop, which evaluates the
+      same per-step expressions on the same values and so matches
+      bitwise.  Preserving the PR-5 split-invariance contract was the
+      design constraint: per-sample accumulator carries and per-block
+      partial sums both change the reduction order — measured 1-ulp
+      drift — so neither is used anywhere.  ``state_leaves`` is the flat
+      ``HealthState`` tuple; the kernels layer stays free of ``core``
+      imports.
+
+    Returns ``(grid, soc_t, (g_f, soc_f, x_f), health_leaves_or_None)``.
+    """
+    alpha = 1.0 - jnp.exp(-jnp.asarray(beta) * dt)
+    t = rack_power.shape[0]
+    masked = ess_on is not None
+    w_all = (
+        jnp.broadcast_to(ess_on.astype(rack_power.dtype), rack_power.shape)
+        if masked
+        else None
+    )
+    if slew is not None:
+        applied, target = slew
+        diff = target - applied
+        ramp01 = jnp.arange(1, t + 1, dtype=jnp.float32) / t
+        corr_parts, corr = (applied, diff, ramp01), None
+    else:
+        corr = jnp.broadcast_to(
+            jnp.asarray(corrective, rack_power.dtype), rack_power.shape
+        )
+        corr_parts = None
+    a = ad
+    bl = bd[:, 1]
+    bv = bd[:, 0]
+
+    def step(carry, inp):
+        g, soc, s0, s1, s2 = carry
+        if slew is not None:
+            (r_t, ramp_t, *rest) = inp
+            c_t = corr_parts[0] + corr_parts[1] * ramp_t
+        else:
+            (r_t, c_t, *rest) = inp
+        if masked:
+            (w_t,) = rest
+        g_new = g + alpha * (r_t - g)
+        if masked:
+            g_new = jnp.where(w_t > 0, g_new, r_t)
+        p_batt = jnp.clip(g_new - r_t + c_t, -p_max, p_max)
+        if masked:
+            p_batt = p_batt * w_t
+        charge = jnp.maximum(p_batt, 0.0)
+        discharge = jnp.maximum(-p_batt, 0.0)
+        soc_new = soc + (dt / q_max) * (eta_c * charge - discharge / eta_d)
+        over_hi = jnp.maximum(soc_new - soc_max, 0.0)
+        over_lo = jnp.maximum(soc_min - soc_new, 0.0)
+        p_batt = p_batt - over_hi * q_max / (eta_c * dt) + over_lo * q_max * eta_d / dt
+        soc_new = jnp.clip(soc_new, soc_min, soc_max)
+        if masked:
+            soc_new = jnp.where(w_t > 0, soc_new, soc)
+        node = r_t + p_batt
+        y = c_row[0] * s0 + c_row[1] * s1 + c_row[2] * s2
+        n0 = a[0, 0] * s0 + a[0, 1] * s1 + a[0, 2] * s2 + bl[0] * node + bv[0]
+        n1 = a[1, 0] * s0 + a[1, 1] * s1 + a[1, 2] * s2 + bl[1] * node + bv[1]
+        n2 = a[2, 0] * s0 + a[2, 1] * s1 + a[2, 2] * s2 + bl[2] * node + bv[2]
+        return (g_new, soc_new, n0, n1, n2), (y, soc_new)
+
+    carry0 = (g0, soc0, x0[:, 0], x0[:, 1], x0[:, 2])
+    xs = [rack_power, ramp01 if slew is not None else corr]
+    if masked:
+        xs.append(w_all)
+    (g_f, soc_f, s0, s1, s2), (grid, soc_t) = jax.lax.scan(
+        step, carry0, tuple(xs)
+    )
+    x_f = jnp.stack([s0, s1, s2], axis=-1)
+    if health is None:
+        return grid, soc_t, (g_f, soc_f, x_f), None
+    (c0, c1, eps, kappa), hs = health
+    (prev_soc, last_ext, direction, half_cycles, cycle_damage, max_dod,
+     charge_soc, discharge_soc, soc_sum, soc_sq_sum, samples) = hs
+    prev_t = jnp.concatenate(
+        [jnp.broadcast_to(prev_soc, soc_t[:1].shape), soc_t[:-1]], axis=0
+    )
+    delta = soc_t - prev_t
+    step_dir = jnp.where(delta > eps, 1.0, jnp.where(delta < -eps, -1.0, 0.0))
+
+    def hbody(carry, inp):
+        last_ext, direction, half_cycles, damage, max_dod = carry
+        prev, sd = inp
+        rev = (sd * direction) < 0.0
+        revf = jnp.where(rev, 1.0, 0.0)
+        depth = jnp.abs(prev - last_ext)
+        half_w = jnp.maximum(c0 + c1 * (prev + last_ext), 0.0)
+        if float(kappa) == 1.0:
+            powd = depth
+        elif float(kappa).is_integer() and 2 <= int(kappa) <= 4:
+            powd = depth
+            for _ in range(int(kappa) - 1):
+                powd = powd * depth
+        else:
+            powd = jnp.power(depth, kappa)
+        dmg = half_w * powd
+        return (
+            jnp.where(rev, prev, last_ext),
+            jnp.where(sd != 0.0, sd, direction),
+            half_cycles + revf,
+            damage + revf * dmg,
+            jnp.maximum(max_dod, revf * depth),
+        ), None
+
+    (last_ext, direction, half_cycles, damage, max_dod), _ = jax.lax.scan(
+        hbody,
+        (last_ext, direction, half_cycles, cycle_damage, max_dod),
+        (prev_t, step_dir),
+    )
+    h_out = (
+        soc_t[-1], last_ext, direction, half_cycles, damage, max_dod,
+        charge_soc + jnp.sum(jnp.maximum(delta, 0.0), axis=0),
+        discharge_soc + jnp.sum(jnp.maximum(-delta, 0.0), axis=0),
+        soc_sum + jnp.sum(soc_t, axis=0),
+        soc_sq_sum + jnp.sum(soc_t * soc_t, axis=0),
+        samples + jnp.int32(t),
+    )
+    return grid, soc_t, (g_f, soc_f, x_f), h_out
+
+
+# -------------------------------------------------------------- admm_iterate
+
+
+def admm_iterate(
+    kkt_stack: jax.Array,  # (2h, 5h) [sigma K^-1 | K^-1 A'] stacked
+    g_blk: jax.Array,  # (h, 2h) SoC-constraint rows of A (A = [I; G])
+    kq: jax.Array,  # (2h, ...) hoisted K^-1 q
+    lo: jax.Array,  # (3h, ...)
+    hi: jax.Array,
+    x0: jax.Array,  # (2h, ...)
+    z0: jax.Array,  # (3h, ...)
+    y0: jax.Array,  # (3h, ...)
+    *,
+    rho: float,
+    iters: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused batched-ADMM iteration loop (the controller QP inner loop).
+
+    Exploits the plan's constraint structure ``A = [I_2h; G]``: the
+    x-update's two K^-1 GEMMs collapse into one stacked
+    ``(2h, 5h) @ (5h, R)`` product, and ``A x`` needs only the ``(h, 2h)``
+    SoC block — the box rows of ``A x`` are ``x`` itself (exactly: the
+    identity block contributes bitwise-equal rows).  Per iteration this is
+    12h^2 R MACs versus 16h^2 R for the unfused pair, with x/z/y staying
+    in one fused loop body (no per-iteration HBM round-trips on the Pallas
+    path).  The stacked GEMM reassociates each output dot (one 5h-term sum
+    instead of 2h- and 3h-term partials added), so x agrees with the
+    unfused formulation to GEMM rounding, not bitwise — the controller
+    equivalence tests bound this against the build-per-step oracle.
+    """
+    rho = jnp.float32(rho)
+
+    def body(carry, _):
+        x, z, y = carry
+        x_new = kkt_stack @ jnp.concatenate([x, rho * z - y], axis=0) - kq
+        ax = jnp.concatenate([x_new, g_blk @ x_new], axis=0)
+        z_new = jnp.clip(ax + y / rho, lo, hi)
+        y_new = y + rho * (ax - z_new)
+        return (x_new, z_new, y_new), None
+
+    (x, z, y), _ = jax.lax.scan(body, (x0, z0, y0), None, length=iters)
+    return x, z, y
+
+
 # ------------------------------------------------------------------- rmsnorm
 
 

@@ -281,6 +281,52 @@ def test_health_is_chunk_size_invariant_and_resume_safe():
     _assert_health_equal(a.state.health, rest.state.health, "resume: ")
 
 
+@pytest.mark.pallas
+def test_megakernel_fold_matches_hybrid_update_bitwise():
+    """The interval-resident Pallas megakernel (interpret mode) folds the
+    exact HealthState the shipped hybrid path produces — ``pdu_sim`` +
+    ``update_consts`` per interval — bit for bit, including across an
+    interval-aligned resume split."""
+    from repro.kernels import ops, ref
+
+    cfg = _cfg()
+    k = int(round(float(cfg.controller.dt) * _HZ))
+    tr = SC.render(_campus(4), 0, 2 * k)
+    st = pdu.init_state(cfg, tr[0])
+    ep = cfg.ess_params
+    filt = st.filter_obj
+    kw = dict(
+        beta=float(ep.beta), dt=1.0 / _HZ, q_max=float(ep.q_max),
+        eta_c=float(ep.eta_c), eta_d=float(ep.eta_d), p_max=float(ep.p_max),
+        soc_min=float(ep.soc_safe_min), soc_max=float(ep.soc_safe_max),
+    )
+    hc = H.step_consts(cfg.health)
+    zero = jnp.zeros_like(st.ess_state.g_filter)
+
+    def hybrid(chunk, g0, soc0, x0, hstate):
+        _, soc_t, fin = ref.pdu_sim(
+            chunk, g0, soc0, x0, filt.ad, filt.bd, filt.c[0],
+            corrective=jnp.zeros_like(chunk), **kw
+        )
+        return fin, H.update_consts(hc, H.HealthState(*hstate), soc_t)
+
+    def kernel(chunk, g0, soc0, x0, hstate):
+        _, _, fin, h2 = ops.pdu_health_sim(
+            chunk, g0, soc0, x0, filt.ad, filt.bd, filt.c[0],
+            corrective=0.0, health=(hc, tuple(hstate)), force="pallas", **kw
+        )
+        return fin, h2
+
+    for fold in (hybrid, kernel):
+        g0, soc0, x0, hs = st.ess_state.g_filter, st.ess_state.soc, st.filter_state, st.health
+        for a in range(0, 2 * k, k):  # one controller interval per block
+            (g0, soc0, x0), hs = fold(tr[a : a + k], g0, soc0, x0, hs)
+        if fold is hybrid:
+            want = H.HealthState(*hs)
+        else:
+            _assert_health_equal(want, H.HealthState(*hs), "megakernel vs hybrid: ")
+
+
 def test_health_trace_monotone_and_disabled_is_zero():
     s = _campus(3)
     res = fleet.condition_scenario_scanned(_cfg(), s, _SPEC, qp_iters=10, chunk_intervals=2)

@@ -1,0 +1,267 @@
+"""Interval-resident conditioning megakernel + batched-ADMM kernel parity.
+
+Runs the Pallas kernels in interpret mode against their jnp oracles
+(``ref.pdu_health_sim`` / ``ref.admm_iterate``) through the ``ops``
+dispatch layer, pinning the PR-5 reproducibility contract:
+
+* SoC path, ESS filter value and **every** health leaf: bitwise.
+* Grid / LC filter state: bitwise on sublane-aligned intervals; a few
+  ulp on ragged intervals (XLA contracts the LC mul-add chain into FMAs
+  differently once the time axis is padded — see the kernel docstring).
+* Degraded-mode weights w in {0, 1}: bitwise against the same masked
+  reference path the engines run.
+* The turning-point machine and block accumulators: bitwise under
+  stream splits (kernel-of-halves == kernel-of-whole == reference).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import controller as ctrl, health as hlt, pdu
+from repro.core.ess import ESSParams
+from repro.kernels import ops, ref
+from repro.power import scenario as SC
+
+pytestmark = pytest.mark.pallas
+
+R, HZ = 192, 200.0
+
+
+def _setup(t, n_racks=R):
+    s = SC.mixed_campus(
+        n_racks, ("llama3_2_1b", "deepseek_v3_671b"),
+        duration_s=30.0, sample_hz=HZ, seed=3, noise_seed=2,
+    )
+    chunk = jax.jit(lambda: SC.render(s, 0, t))()
+    cfg = pdu.make_pdu(sample_dt=1.0 / HZ, track_health=True)
+    st = pdu.init_state(cfg, chunk[0])
+    ep = cfg.ess_params
+    kw = dict(
+        beta=float(ep.beta), dt=1.0 / HZ, q_max=float(ep.q_max),
+        eta_c=float(ep.eta_c), eta_d=float(ep.eta_d), p_max=float(ep.p_max),
+        soc_min=float(ep.soc_safe_min), soc_max=float(ep.soc_safe_max),
+    )
+    filt = st.filter_obj
+    args = (st.ess_state.g_filter, st.ess_state.soc, st.filter_state,
+            filt.ad, filt.bd, filt.c[0])
+    health = (hlt.step_consts(cfg.health), tuple(st.health))
+    return chunk, args, kw, health
+
+
+def _slew(n_racks=R):
+    applied = jnp.zeros((n_racks,), jnp.float32)
+    target = 0.01 * jnp.ones((n_racks,), jnp.float32)
+    return applied, target
+
+
+def _bw(a, b):
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def _assert_parity(r_ref, r_pl, *, grid_bitwise):
+    grid_r, soc_r, (g_r, socf_r, x_r), h_r = r_ref
+    grid_p, soc_p, (g_p, socf_p, x_p), h_p = r_pl
+    assert _bw(soc_r, soc_p), "SoC path must be bitwise"
+    assert _bw(g_r, g_p), "ESS filter final must be bitwise"
+    assert _bw(socf_r, socf_p), "SoC final must be bitwise"
+    if grid_bitwise:
+        assert _bw(grid_r, grid_p), "grid must be bitwise on aligned intervals"
+        assert _bw(x_r, x_p)
+    else:
+        np.testing.assert_allclose(
+            np.asarray(grid_p), np.asarray(grid_r), rtol=0, atol=1e-5
+        )
+        np.testing.assert_allclose(np.asarray(x_p), np.asarray(x_r), rtol=0, atol=1e-5)
+    if h_r is None:
+        assert h_p is None
+    else:
+        for i, (a, b) in enumerate(zip(h_r, h_p)):
+            assert _bw(a, b), f"health leaf {i} must be bitwise"
+
+
+# ------------------------------------------------------------- megakernel
+
+
+def test_unmasked_parity_bitwise():
+    chunk, args, kw, health = _setup(40)
+    r1 = ref.pdu_health_sim(*([chunk] + list(args)), slew=_slew(), health=health, **kw)
+    r2 = ops.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), health=health, force="pallas", **kw
+    )
+    _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_masked_binary_weights_bitwise():
+    """w in {0, 1} (hard converter cutoff) — the degraded-mode contract."""
+    chunk, args, kw, health = _setup(40)
+    w = (jax.random.uniform(jax.random.key(7), (R,)) > 0.3).astype(jnp.float32)
+    r1 = ref.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), ess_on=w, health=health, **kw
+    )
+    r2 = ops.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), ess_on=w, health=health,
+        force="pallas", **kw
+    )
+    _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_fractional_winddown_weights_bitwise():
+    """Per-sample fractional weights (converter wind-down ramp, 2-D path)."""
+    chunk, args, kw, health = _setup(40)
+    w = jnp.clip(jax.random.uniform(jax.random.key(8), (40, R)), 0.0, 1.0)
+    r1 = ref.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), ess_on=w, health=health, **kw
+    )
+    r2 = ops.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), ess_on=w, health=health,
+        force="pallas", **kw
+    )
+    _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_dense_and_scalar_corrective_parity():
+    chunk, args, kw, health = _setup(40)
+    corr = 0.02 * jax.random.normal(jax.random.key(9), (40, R), jnp.float32)
+    for c in (corr, 0.0):
+        r1 = ref.pdu_health_sim(*([chunk] + list(args)), corrective=c, health=health, **kw)
+        r2 = ops.pdu_health_sim(
+            *([chunk] + list(args)), corrective=c, health=health, force="pallas", **kw
+        )
+        _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_ragged_final_interval():
+    """t = 37 stresses the sublane pad: the loop must stop at t, padding
+    rows must never leak into the block reductions, and the contract
+    degrades only on the grid/LC path (ulp; see kernel docstring)."""
+    chunk, args, kw, health = _setup(37)
+    r1 = ref.pdu_health_sim(*([chunk] + list(args)), slew=_slew(), health=health, **kw)
+    r2 = ops.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), health=health, force="pallas", **kw
+    )
+    _assert_parity(r1, r2, grid_bitwise=False)
+
+
+def test_multi_tile_and_rack_padding():
+    """R = 192 with r_blk = 64: three full tiles; r_blk = 128: one full +
+    one padded tile.  Tiling must not change a single bit."""
+    chunk, args, kw, health = _setup(40)
+    r1 = ref.pdu_health_sim(*([chunk] + list(args)), slew=_slew(), health=health, **kw)
+    for blk in (64, 128):
+        r2 = ops.pdu_health_sim(
+            *([chunk] + list(args)), slew=_slew(), health=health,
+            force="pallas", r_blk=blk, **kw
+        )
+        _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_no_health_path():
+    chunk, args, kw, _ = _setup(40)
+    r1 = ref.pdu_health_sim(*([chunk] + list(args)), slew=_slew(), **kw)
+    r2 = ops.pdu_health_sim(
+        *([chunk] + list(args)), slew=_slew(), force="pallas", **kw
+    )
+    _assert_parity(r1, r2, grid_bitwise=True)
+
+
+def test_stream_split_health_bitwise():
+    """The PR-5 split-invariance contract, now for the megakernel: the
+    turning-point machine carries (prev, last_ext, direction, half_cycles,
+    cycle_damage, max_dod) and the sample count are bit-identical under
+    ANY stream split; the block-reduction leaves (charge/discharge
+    throughput, SoC sums) are bit-identical whenever both sides fold the
+    same blocks — so kernel-chain == reference-chain bitwise on every
+    leaf, and kernel-chain == one-shot bitwise on the machine leaves."""
+    t = 40
+    chunk, args, kw, health = _setup(t)
+    g0, soc0, x0, ad, bd, c_row = args
+    hc, h0 = health
+    MACHINE = (0, 1, 2, 3, 4, 5, 10)
+
+    one = ops.pdu_health_sim(
+        chunk, g0, soc0, x0, ad, bd, c_row, slew=_slew(), health=(hc, h0),
+        force="pallas", **kw
+    )
+    for cut in (8, 17, 32):
+        # The slew ramp is interval-scoped, so splitting mid-interval
+        # replays the same rendered corrective profile via the dense path.
+        applied, target = _slew()
+        ramp = jnp.arange(1, t + 1, dtype=jnp.float32) / t
+        corr = applied + (target - applied) * ramp[:, None]
+
+        def chain(fn, force=None):
+            fkw = {} if force is None else {"force": force}
+            _, _, (gf, sf, xf), ha = fn(
+                chunk[:cut], g0, soc0, x0, ad, bd, c_row,
+                corrective=corr[:cut], health=(hc, h0), **fkw, **kw
+            )
+            return fn(
+                chunk[cut:], gf, sf, xf, ad, bd, c_row,
+                corrective=corr[cut:], health=(hc, ha), **fkw, **kw
+            )
+
+        _, _, fin_k, hk = chain(ops.pdu_health_sim, force="pallas")
+        _, _, _, hr = chain(ref.pdu_health_sim)
+        for i, (x, y) in enumerate(zip(hk, hr)):
+            assert _bw(x, y), f"cut={cut}: health leaf {i} drifts vs ref chain"
+        for i in MACHINE:
+            assert _bw(hk[i], one[3][i]), (
+                f"cut={cut}: machine leaf {i} drifts vs one-shot"
+            )
+        assert _bw(fin_k[1], one[2][1])
+
+
+# ------------------------------------------------------------ batched ADMM
+
+
+def _plan_problem(n_racks=R, seed=0):
+    cfg, es = ctrl.ControllerConfig.create(), ESSParams.create(q_max_seconds=40.0)
+    plan = ctrl.make_plan(cfg, es)
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    soc = jnp.clip(0.5 + 0.2 * jax.random.normal(k1, (n_racks,)), 0.15, 0.85)
+    u_prev = 0.3 * jax.random.normal(k2, (n_racks,))
+    q, lo, hi = ctrl._qp_state_terms(plan, soc, jnp.float32(0.5), u_prev)
+    kq = plan.kkt_inv @ q
+    x0 = jnp.zeros_like(q)
+    z0 = jnp.clip(plan.a_mat @ x0, lo, hi)
+    y0 = jnp.zeros_like(z0)
+    kkt_stack = jnp.concatenate([plan.kkt_inv_sigma, plan.kkt_inv_at], axis=1)
+    g_blk = plan.a_mat[2 * plan.horizon:]
+    return plan, (kkt_stack, g_blk, kq, lo, hi, x0, z0, y0)
+
+
+@pytest.mark.parametrize("iters", [1, 8, 30])
+def test_admm_kernel_matches_reference(iters):
+    """Real (contractive) controller plan: the kernel tracks the jnp
+    reference through the whole loop — convergent ADMM damps the ulp-level
+    FMA differences instead of amplifying them."""
+    plan, ops_args = _plan_problem()
+    r1 = ref.admm_iterate(*ops_args, rho=plan.rho, iters=iters)
+    r2 = ops.admm_iterate(*ops_args, rho=plan.rho, iters=iters, force="pallas")
+    for nm, a, b in zip("xzy", r1, r2):
+        np.testing.assert_allclose(
+            np.asarray(b), np.asarray(a), rtol=0, atol=2e-5,
+            err_msg=f"{nm} after {iters} iters",
+        )
+
+
+def test_admm_kernel_rack_tiling():
+    """Rack padding / multiple lane tiles must not change the solve."""
+    plan, ops_args = _plan_problem(n_racks=300)
+    r1 = ref.admm_iterate(*ops_args, rho=plan.rho, iters=20)
+    r2 = ops.admm_iterate(
+        *ops_args, rho=plan.rho, iters=20, force="pallas", r_blk=128
+    )
+    for a, b in zip(r1, r2):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=0, atol=2e-5)
+
+
+def test_admm_kernel_unbatched_falls_back():
+    """1-D (single-rack) solves take the reference path through ops."""
+    plan, (kkt_stack, g_blk, kq, lo, hi, x0, z0, y0) = _plan_problem(n_racks=1)
+    args1 = (kkt_stack, g_blk, kq[:, 0], lo[:, 0], hi[:, 0], x0[:, 0], z0[:, 0], y0[:, 0])
+    r1 = ref.admm_iterate(*args1, rho=plan.rho, iters=10)
+    r2 = ops.admm_iterate(*args1, rho=plan.rho, iters=10, force="pallas")
+    for a, b in zip(r1, r2):
+        assert _bw(a, b)
