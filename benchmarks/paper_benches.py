@@ -591,6 +591,61 @@ def bench_mixed_campus_faulty():
     )
 
 
+def bench_grid_region():
+    """ISSUE-8 acceptance region: 4 campuses x 256 racks of synchronized
+    checkpoint stalls aggregated at one point of interconnection and
+    conditioned by the region engine (per-campus scanned conditioning +
+    in-scan POI fold + wide-area Goertzel mode bank in one program).  The
+    headline is the POI view: ramp rate at the interconnection, the
+    swing-model frequency excursion, and the inter-area mode verdict —
+    lockstep checkpoints must ring the 0.1-1 Hz band (the staggered twin
+    of this scenario passes; see EXPERIMENTS §Grid-region).  In ``--quick``
+    mode the in-scan psum POI is re-derived host-side as the left-to-right
+    weighted sum of the per-campus aggregates and asserted bitwise — the
+    same engine-agreement contract the sharded parity test holds across
+    8 forced devices."""
+    from repro.core import grid
+
+    n_campuses = 4
+    n_racks = _q(256, 32)
+    duration = _q(200.0, 100.0)
+    hz = 50.0
+    reg = grid.synchronized_region(
+        n_campuses=n_campuses, n_racks=n_racks, duration_s=duration,
+        sample_hz=hz,
+    )
+    cfg = pdu.make_pdu(sample_dt=1.0 / hz)
+    spec = compliance.GridSpec.create()
+    run = lambda: fleet.condition(reg, cfg, spec)
+    run()  # compile
+    us, res = _best_of(run, lambda r: r.poi_grid)
+    total_racks = n_campuses * n_racks
+    UNITS["grid_region"] = dict(
+        racks=total_racks, samples=reg.total_samples * total_racks)
+
+    if QUICK:
+        w = np.asarray(res.weights)
+        acc = jnp.float32(w[0]) * res.per_campus[0].campus_grid
+        for c in range(1, n_campuses):
+            acc = acc + jnp.float32(w[c]) * res.per_campus[c].campus_grid
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(res.poi_grid))
+
+    rep = res.report_poi
+    mags = np.asarray(rep.mode_mags)
+    assert not bool(rep.modes_ok), (
+        "synchronized checkpoint region failed to ring the inter-area band"
+    )
+    assert bool(rep.ramp_ok), "region POI trace broke the ramp spec"
+    return "grid_region", us, (
+        f"campuses={n_campuses} racks={total_racks} "
+        f"poi_ramp={float(rep.max_ramp):.4f}/s ramp_ok={bool(rep.ramp_ok)} "
+        f"inter_area_mag={mags[0]:.4f} modes_ok={bool(rep.modes_ok)} "
+        f"max_freq_dev={float(np.max(np.abs(np.asarray(res.poi_freq_dev)))):.3f}Hz "
+        f"us_per_rack={us / total_racks:.0f}"
+        + (" engines_agree=True" if QUICK else "")
+    )
+
+
 ALL = [
     bench_fig7_frequency_response,
     bench_fig9_ramp_rate,
@@ -607,4 +662,5 @@ ALL = [
     bench_mixed_campus,
     bench_mixed_campus_health,
     bench_mixed_campus_faulty,
+    bench_grid_region,
 ]

@@ -9,13 +9,16 @@
   sizing      — component sizing from grid spec (App. A.1)
   burn        — software GPU-burn baseline (§7.3, App. C)
   pdu         — the composed EasyRider PDU, streaming conditioner (§4)
-  fleet       — campus-scale aggregation (App. D)
+  fleet       — campus-scale aggregation (App. D), the ``condition`` facade
+  grid        — grid-region scale-out: POI aggregation, swing coupling,
+                wide-area mode detection, shard_map region engine
 """
 from repro.core import (
-    burn, compliance, controller, ess, filters, fleet, health, pdu, sizing,
+    burn, compliance, controller, ess, filters, fleet, grid, health, pdu,
+    sizing,
 )
 
 __all__ = [
-    "burn", "compliance", "controller", "ess", "filters", "fleet", "health",
-    "pdu", "sizing",
+    "burn", "compliance", "controller", "ess", "filters", "fleet", "grid",
+    "health", "pdu", "sizing",
 ]

@@ -99,6 +99,32 @@ class ComplianceReport(NamedTuple):
     worst_high_freq_mag: jax.Array
     spectrum_ok: jax.Array
     ok: jax.Array
+    # Wide-area oscillation-mode verdicts (grid-region POI reports only;
+    # trailing defaults keep every existing constructor and unpack site
+    # working).  ``mode_mags``/``mode_ok`` are (B,) per-band arrays aligned
+    # with the detector's band table; ``modes_ok`` is the all-bands verdict
+    # and is already folded into ``ok`` when present.  None = not tracked.
+    mode_mags: jax.Array | None = None
+    mode_ok: jax.Array | None = None
+    modes_ok: jax.Array | None = None
+
+
+def with_mode_verdicts(
+    report: ComplianceReport, mode_mags: jax.Array, mode_ok: jax.Array
+) -> ComplianceReport:
+    """Fold per-band oscillation-mode verdicts into a report.
+
+    ``ok`` becomes the conjunction of the ramp, spectrum, and all-bands
+    mode verdicts — a POI that rings a wide-area mode band is non-compliant
+    even when its ramp and high-frequency lines pass.
+    """
+    modes_ok = jnp.all(mode_ok)
+    return report._replace(
+        mode_mags=mode_mags,
+        mode_ok=mode_ok,
+        modes_ok=modes_ok,
+        ok=report.ok & modes_ok,
+    )
 
 
 def check(power: jax.Array, dt: float, spec: GridSpec) -> ComplianceReport:

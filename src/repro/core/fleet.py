@@ -14,6 +14,7 @@ same device mesh the trainer uses (`shard_racks`).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Callable, NamedTuple
 
@@ -22,6 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compliance, health as hlt, pdu
+from repro.sharding.rules import shard_racks, shard_racks_in_jit  # noqa: F401
+# (mesh utilities live in ``sharding.rules`` now; re-exported here for
+# compatibility — ``fleet.shard_racks`` keeps working.)
 
 
 def synchronous_aggregate(rack_power: jax.Array, n_racks: int) -> jax.Array:
@@ -76,22 +80,85 @@ def apply_failures(
     return jnp.where(FLT.rack_down(sched, 0, t), p_idle, traces)
 
 
-class FleetResult(NamedTuple):
-    grid_traces: jax.Array  # (T, R) conditioned per-rack
-    campus_rack: jax.Array  # (T,) mean per-unit unconditioned campus load
-    campus_grid: jax.Array  # (T,) mean per-unit conditioned campus load
-    report_rack: compliance.ComplianceReport
-    report_grid: compliance.ComplianceReport
+class ConditioningResult(NamedTuple):
+    """The one result type every conditioning engine returns.
+
+    Optional fields are ``None`` when the producing engine does not track
+    them: the one-shot engine has no streaming state or observers, the
+    streaming engines never materialize per-rack grid traces, and the POI /
+    per-campus fields exist only for grid regions (``core.grid``, where the
+    campus aggregates gain a leading ``(C,)`` campus axis).
+    """
+
+    campus_rack: jax.Array = None  # (T,) mean per-unit unconditioned load
+    campus_grid: jax.Array = None  # (T,) mean per-unit conditioned load
+    report_rack: compliance.ComplianceReport = None
+    report_grid: compliance.ComplianceReport = None
     # Per-rack wear report; when the config does not track health this is
     # the report of an empty history (zero cycles/fade, INFINITE projected
     # lifetime — serialize via ``health.fleet_summary(..., json_safe=True)``).
-    health: hlt.HealthReport
+    health: hlt.HealthReport = None
+    # --- one-shot engine extras
+    grid_traces: jax.Array = None  # (T, R) conditioned per-rack
+    # --- streaming engine extras
+    soc_mean: jax.Array = None  # (n_ctrl,) fleet-mean SoC per interval
+    state: pdu.PDUState = None  # final PDU state (the stream can resume);
+    #   a grid region carries a tuple of per-campus states instead.
+    max_qp_residual: jax.Array = None  # worst QP primal residual seen
+    health_trace: jax.Array = None  # (n_chunks, 3) [mean EFC, max fade, max DoD]
     # (n_ctrl,) fraction of ESS units online per control interval (ones
-    # unless the cfg runs degraded_mode with an availability mask).
+    # unless the cfg runs degraded_mode under a fault schedule).
     ess_online_frac: jax.Array = None
+    # --- grid-region extras (``core.grid``)
+    poi_rack: jax.Array = None  # (T,) POI unconditioned (weighted campus sum)
+    poi_grid: jax.Array = None  # (T,) POI conditioned
+    report_poi: compliance.ComplianceReport = None  # POI report + mode verdicts
+    poi_freq_dev: jax.Array = None  # (T,) swing-model frequency deviation [Hz]
+    poi_volt_dev: jax.Array = None  # (T,) first-order voltage deviation [pu]
+    per_campus: tuple = None  # per-campus ConditioningResults
+    weights: jax.Array = None  # (C,) campus POI weights
+    # --- observability handles (streaming engines) backing ``.report()``
+    grid_spec: compliance.GridSpec = None
+    bank: compliance.SpectrumBank = None
+    observers: "_Observers" = None
+
+    def report(self, which: str = "grid") -> compliance.ComplianceReport:
+        """Compliance report, re-derived from the streaming observers.
+
+        ``which`` selects the stream: ``"rack"`` (unconditioned),
+        ``"grid"`` (conditioned — the default), or ``"poi"`` (grid regions;
+        the conditioned POI stream with mode-band verdicts folded in).
+        Engines without observers (the one-shot path) return their stored
+        whole-trace report unchanged.
+        """
+        stored = {"rack": self.report_rack, "grid": self.report_grid,
+                  "poi": self.report_poi}
+        if which not in stored:
+            raise ValueError(
+                f"which={which!r} (expected 'rack', 'grid' or 'poi')")
+        pre = stored[which]
+        if self.observers is None or self.bank is None or self.grid_spec is None:
+            return pre
+        key = "grid" if which == "poi" else which
+        rep = compliance.report_from_observers(
+            self.grid_spec,
+            getattr(self.observers, f"ramp_{key}"),
+            self.bank,
+            getattr(self.observers, f"spec_{key}"),
+        )
+        if pre is not None and pre.mode_mags is not None:
+            rep = compliance.with_mode_verdicts(rep, pre.mode_mags, pre.mode_ok)
+        return rep
 
 
-def condition_fleet(
+# Deprecated aliases: every engine returns ``ConditioningResult`` now, with
+# the former FleetResult / StreamingFleetResult fields as a subset.  New
+# code should name ``ConditioningResult`` (or just use the facade).
+FleetResult = ConditioningResult
+StreamingFleetResult = ConditioningResult
+
+
+def _condition_fleet_impl(
     cfg: pdu.PDUConfig,
     traces: jax.Array,  # (T, R) per-unit rack traces
     grid_spec: compliance.GridSpec,
@@ -101,7 +168,7 @@ def condition_fleet(
     use_plan: bool = True,
     ess_online: jax.Array | None = None,
     ess_weight: jax.Array | None = None,
-) -> FleetResult:
+) -> ConditioningResult:
     """Condition every rack with its own PDU; check campus compliance.
 
     The per-rack state is fully vectorized (rack axis rides through the
@@ -130,7 +197,7 @@ def condition_fleet(
         campus_rack = jnp.mean(traces, axis=1)
         on_frac = jnp.ones(telem.soc.shape[0], jnp.float32)
     campus_grid = jnp.mean(grid, axis=1)
-    return FleetResult(
+    return ConditioningResult(
         grid_traces=grid,
         campus_rack=campus_rack,
         campus_grid=campus_grid,
@@ -148,23 +215,6 @@ def _health_params(cfg: pdu.PDUConfig) -> hlt.HealthParams:
 
 
 # ----------------------------------------------------------------- streaming
-
-
-class StreamingFleetResult(NamedTuple):
-    campus_rack: jax.Array  # (T,) mean per-unit unconditioned campus load
-    campus_grid: jax.Array  # (T,) mean per-unit conditioned campus load
-    soc_mean: jax.Array  # (n_ctrl,) fleet-mean SoC per control interval
-    report_rack: compliance.ComplianceReport
-    report_grid: compliance.ComplianceReport
-    state: pdu.PDUState  # final per-rack PDU state (the stream can resume)
-    max_qp_residual: jax.Array  # worst per-interval QP primal residual seen
-    health_trace: jax.Array  # (n_chunks, 3) [mean EFC, max fade, max DoD]
-    # Per-rack wear report; an untracked config yields the empty-history
-    # report (zero cycles/fade, INFINITE projected lifetime).
-    health: hlt.HealthReport
-    # (n_ctrl,) fraction of ESS units online per control interval (ones
-    # unless the cfg runs degraded_mode under a fault schedule).
-    ess_online_frac: jax.Array = None
 
 
 class _Observers(NamedTuple):
@@ -338,8 +388,10 @@ def _finish_streaming(
     """Assemble the result from streaming state: the compliance reports
     come from the cross-chunk observers (exact ramp, Goertzel spec lines),
     not from re-analyzing the materialized campus arrays — the arrays are
-    returned for plotting/diagnostics but no longer gate compliance."""
-    return StreamingFleetResult(
+    returned for plotting/diagnostics but no longer gate compliance.  The
+    observers (and their bank/spec) ride along so ``.report()`` can
+    re-derive reports later."""
+    return ConditioningResult(
         campus_rack=campus_rack,
         campus_grid=campus_grid,
         soc_mean=soc_mean,
@@ -356,10 +408,13 @@ def _finish_streaming(
             _health_params(cfg), cfg.ess_params, state.health, cfg.sample_dt
         ),
         ess_online_frac=ess_frac,
+        grid_spec=grid_spec,
+        bank=bank,
+        observers=obs,
     )
 
 
-def condition_fleet_streaming(
+def _condition_fleet_streaming_impl(
     cfg: pdu.PDUConfig,
     traces: jax.Array | Callable[[int, int], jax.Array],
     grid_spec: compliance.GridSpec,
@@ -373,7 +428,7 @@ def condition_fleet_streaming(
     state: pdu.PDUState | None = None,
     ess_online: jax.Array | None = None,
     ess_weight: jax.Array | None = None,
-) -> StreamingFleetResult:
+) -> ConditioningResult:
     """Campus-scale conditioning in time chunks with bounded working set.
 
     ``condition_fleet`` materializes the rack traces *and* the conditioned
@@ -484,6 +539,44 @@ def condition_fleet_streaming(
     )
 
 
+def _condition_chunk(cfg, scen, st, t0, n, *, k, qp_iters, prep=None):
+    """Render + condition one ``n``-sample chunk at absolute sample ``t0``.
+
+    The per-chunk building block shared by the scanned engine and the
+    grid-region engines (``core.grid``) — keeping it single-sourced is what
+    keeps the sharded region run bitwise against the sequential loop.  With
+    a fault schedule attached to the scenario (and a degraded-mode config)
+    the per-interval ESS availability mask and the per-sample hardware
+    weight are derived *inside* the jit from the schedule's episode table;
+    both are pure in the absolute sample index (like the renderer), so the
+    result is chunk- and resume-invariant by construction.  ``prep``
+    post-processes the rendered ``(n, R)`` block (e.g. an in-jit rack
+    sharding constraint).
+    """
+    from repro.power import faults as FLT
+    from repro.power import scenario as SC
+
+    # Trace-time structural check: the caller's jit retraces automatically
+    # when the scenario gains/loses a fault schedule (treedef change).
+    faulty = cfg.degraded_mode and scen.faults is not None
+    tr = SC.render(scen, t0, n)
+    if tr.ndim == 1:  # unbatched scenario: lift to a 1-rack fleet
+        tr = tr[:, None]
+    if prep is not None:
+        tr = prep(tr)
+    return pdu.condition_campus(
+        cfg, st, tr, qp_iters=qp_iters,
+        ess_online=(
+            FLT.interval_online(scen.faults, t0, -(-n // k), k)
+            if faulty else None
+        ),
+        ess_weight=(
+            FLT.ess_weight(scen.faults, t0, n, scen.edge_width)
+            if faulty else None
+        ),
+    )
+
+
 def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank):
     """Cached jitted scanned engine: the whole trace in ONE dispatch.
 
@@ -511,12 +604,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
     vs a schedule changes the scenario treedef, which retraces the cached
     jit automatically — no extra cache key needed.
     """
-    from repro.power import faults as FLT
-    from repro.power import scenario as SC
-
     def prep(tr):
-        if tr.ndim == 1:  # unbatched scenario: lift to a 1-rack fleet
-            tr = tr[:, None]
         if mesh is not None:
             tr = shard_racks_in_jit(tr, mesh, rack_axis)
         return tr
@@ -525,31 +613,12 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
         @functools.partial(jax.jit, donate_argnums=(1,))
         def run(scen, st, start):
             obs = _observers_init(bank)
-            # Trace-time structural check: retraced automatically when the
-            # scenario gains/loses a fault schedule (treedef change).
-            faulty = cfg.degraded_mode and scen.faults is not None
-
-            def mask(t0, n_int):
-                if not faulty:
-                    return None
-                return FLT.interval_online(scen.faults, t0, n_int, k)
-
-            def wt(t0, n_smp):
-                # Per-sample hardware availability (converter wind-down over
-                # the scenario's edge window) — pure in the absolute sample
-                # index like the renderer, so chunk/resume invariant.
-                if not faulty:
-                    return None
-                return FLT.ess_weight(scen.faults, t0, n_smp, scen.edge_width)
 
             def body(carry, c_idx):
                 st, obs = carry
-                t0 = start + c_idx * chunk
-                tr = prep(SC.render(scen, t0, chunk))
-                st2, ch = pdu.condition_campus(
-                    cfg, st, tr, qp_iters=qp_iters,
-                    ess_online=mask(t0, chunk // k),
-                    ess_weight=wt(t0, chunk),
+                st2, ch = _condition_chunk(
+                    cfg, scen, st, start + c_idx * chunk, chunk,
+                    k=k, qp_iters=qp_iters, prep=prep,
                 )
                 obs2 = _observers_update(obs, bank, ch, cfg.sample_dt)
                 return (st2, obs2), ch
@@ -569,12 +638,9 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
                 worst.append(jnp.max(ch.max_qp_residual))
                 htrace.append(ch.health)  # (n_full, 3)
             if rem:
-                t0 = start + n_full * chunk
-                tr = prep(SC.render(scen, t0, rem))
-                st, ch = pdu.condition_campus(
-                    cfg, st, tr, qp_iters=qp_iters,
-                    ess_online=mask(t0, -(-rem // k)),
-                    ess_weight=wt(t0, rem),
+                st, ch = _condition_chunk(
+                    cfg, scen, st, start + n_full * chunk, rem,
+                    k=k, qp_iters=qp_iters, prep=prep,
                 )
                 obs = _observers_update(obs, bank, ch, cfg.sample_dt)
                 parts.append(ch)
@@ -599,7 +665,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
     )
 
 
-def condition_scenario_scanned(
+def _condition_scenario_scanned_impl(
     cfg: pdu.PDUConfig,
     scenario,
     grid_spec: compliance.GridSpec,
@@ -612,7 +678,7 @@ def condition_scenario_scanned(
     state: pdu.PDUState | None = None,
     start_sample: int = 0,
     stop_sample: int | None = None,
-) -> StreamingFleetResult:
+) -> ConditioningResult:
     """Device-resident streaming: render + condition in one scanned jit.
 
     The host-loop engine pays per-chunk Python dispatch, a separately
@@ -706,6 +772,311 @@ def _check_scenario_faults(scenario, cfg: pdu.PDUConfig) -> None:
         )
 
 
+def _scenario_fault_data(cfg: pdu.PDUConfig, scenario) -> dict:
+    """Precomputed availability mask/weight for engines that take them as
+    data (host loop, one-shot) — the same pure functions the scanned engine
+    evaluates in-jit, so every engine stays bitwise identical under any
+    fault schedule."""
+    if not (cfg.degraded_mode and getattr(scenario, "faults", None) is not None):
+        return {}
+    from repro.power import faults as FLT
+
+    k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
+    n_ctrl = -(-scenario.total_samples // k)
+    return {
+        "ess_online": FLT.interval_online(scenario.faults, 0, n_ctrl, k),
+        "ess_weight": FLT.ess_weight(
+            scenario.faults, 0, scenario.total_samples, scenario.edge_width
+        ),
+    }
+
+
+def _condition_scenario_host_impl(
+    cfg: pdu.PDUConfig,
+    scenario,
+    grid_spec: compliance.GridSpec,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+    chunk_intervals: int = 16,
+    state: pdu.PDUState | None = None,
+    soc0: float = 0.5,
+    qp_iters: int = 30,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
+) -> ConditioningResult:
+    """Scenario via the per-chunk host loop — the slow oracle the scanned
+    engine is equivalence-tested against."""
+    from repro.power import scenario as SC
+
+    _check_scenario_rate(scenario, cfg)
+    _check_scenario_faults(scenario, cfg)
+    fault_data = _scenario_fault_data(cfg, scenario)
+    if ess_online is None:
+        ess_online = fault_data.get("ess_online")
+    if ess_weight is None:
+        ess_weight = fault_data.get("ess_weight")
+    return _condition_fleet_streaming_impl(
+        cfg,
+        SC.chunk_provider(scenario),
+        grid_spec,
+        total_samples=scenario.total_samples,
+        soc0=soc0,
+        qp_iters=qp_iters,
+        chunk_intervals=chunk_intervals,
+        mesh=mesh,
+        rack_axis=rack_axis,
+        state=state,
+        ess_online=ess_online,
+        ess_weight=ess_weight,
+    )
+
+
+# ------------------------------------------------------------------- facade
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamOptions:
+    """Streaming window options for the ``condition`` facade.
+
+    ``chunk_intervals`` sizes the streaming chunk (controller intervals per
+    chunk); ``state`` resumes a previous stream (a prior result's
+    ``.state`` — a tuple of per-campus states for a grid region);
+    ``start_sample`` / ``stop_sample`` window the scanned engines over
+    ``[start, stop)`` of the unmodified scenario; ``total_samples`` is
+    required (and only meaningful) for raw chunk providers.
+    """
+
+    chunk_intervals: int = 16
+    state: object = None
+    start_sample: int = 0
+    stop_sample: int | None = None
+    total_samples: int | None = None
+
+
+def _as_stream_options(stream) -> StreamOptions:
+    if stream is None:
+        return StreamOptions()
+    if isinstance(stream, StreamOptions):
+        return stream
+    if isinstance(stream, dict):
+        return StreamOptions(**stream)
+    raise TypeError(
+        f"stream must be a StreamOptions, dict or None, got {type(stream)!r}")
+
+
+def _reject_stream_options(so: StreamOptions, engine: str, *fields: str) -> None:
+    defaults = StreamOptions()
+    for f in fields:
+        if getattr(so, f) != getattr(defaults, f):
+            raise ValueError(
+                f"stream option {f!r} is not supported by the {engine!r} engine")
+
+
+def condition(
+    target,
+    cfg: pdu.PDUConfig,
+    grid_spec: compliance.GridSpec | None = None,
+    *,
+    engine: str = "scanned",
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+    stream: StreamOptions | dict | None = None,
+    **kwargs,
+) -> ConditioningResult:
+    """THE conditioning entry point: one facade over every engine.
+
+    ``target`` selects the workload form:
+
+    * a ``power.scenario.Scenario`` — a (possibly heterogeneous, faulted)
+      campus, rendered on-device;
+    * a ``core.grid.GridRegion`` — N campuses aggregated at a point of
+      interconnection (POI observers + mode-band verdicts ride along; with
+      a ``mesh`` carrying a ``"campus"`` axis the campuses run in parallel
+      under ``shard_map``, bitwise against the sequential loop);
+    * a materialized ``(T, R)`` rack-trace array, or a chunk provider
+      ``f(start, length) -> (length, R)`` (with ``stream.total_samples``).
+
+    ``engine`` picks the execution strategy: ``"scanned"`` (default —
+    render + condition in one scanned jit; scenarios/regions only),
+    ``"host"`` (per-chunk host loop, the slow oracle), or ``"oneshot"``
+    (whole-trace ``(T, R)`` materialization; supports ``use_plan=False``).
+    ``mesh`` is taken once here — rack sharding (``"data"`` axis) and
+    campus sharding (``"campus"`` axis) both derive from it.  ``stream``
+    bundles the windowing/resume options (see ``StreamOptions``).
+    Remaining keywords (``soc0``, ``qp_iters``, ``use_plan``,
+    ``ess_online``, ``ess_weight``) pass through to the engine.
+
+    Returns a ``ConditioningResult`` whatever the path; fields the engine
+    does not track are ``None``.  The pre-facade entry points
+    (``condition_fleet``, ``condition_fleet_streaming``,
+    ``condition_scenario_scanned``, ``condition_scenario_streaming``)
+    remain as thin deprecated wrappers over this function.
+    """
+    spec = compliance.GridSpec.create() if grid_spec is None else grid_spec
+    so = _as_stream_options(stream)
+
+    if hasattr(target, "campuses"):  # GridRegion (duck-typed; grid imports us)
+        from repro.core import grid as _grid
+
+        if engine != "scanned":
+            raise ValueError(
+                f"grid regions run the scanned engine only (got {engine!r})")
+        _reject_stream_options(so, "grid-region", "total_samples")
+        return _grid.condition_region(
+            cfg, target, spec, mesh=mesh,
+            chunk_intervals=so.chunk_intervals, states=so.state,
+            start_sample=so.start_sample, stop_sample=so.stop_sample,
+            **kwargs,
+        )
+
+    is_scenario = hasattr(target, "total_samples") and not callable(target)
+    if is_scenario:
+        if engine == "scanned":
+            _reject_stream_options(so, "scanned", "total_samples")
+            return _condition_scenario_scanned_impl(
+                cfg, target, spec, mesh=mesh, rack_axis=rack_axis,
+                chunk_intervals=so.chunk_intervals, state=so.state,
+                start_sample=so.start_sample, stop_sample=so.stop_sample,
+                **kwargs,
+            )
+        if engine == "host":
+            _reject_stream_options(
+                so, "host", "start_sample", "stop_sample", "total_samples")
+            return _condition_scenario_host_impl(
+                cfg, target, spec, mesh=mesh, rack_axis=rack_axis,
+                chunk_intervals=so.chunk_intervals, state=so.state,
+                **kwargs,
+            )
+        if engine == "oneshot":
+            from repro.power import scenario as SC
+
+            _reject_stream_options(
+                so, "oneshot", "state", "start_sample", "stop_sample",
+                "total_samples")
+            _check_scenario_rate(target, cfg)
+            _check_scenario_faults(target, cfg)
+            for key, val in _scenario_fault_data(cfg, target).items():
+                kwargs.setdefault(key, val)
+            tr = SC.render(target, 0, target.total_samples)
+            if tr.ndim == 1:
+                tr = tr[:, None]
+            return _condition_fleet_impl(cfg, tr, spec, **kwargs)
+        raise ValueError(
+            f"unknown engine {engine!r} "
+            "(expected 'scanned', 'host' or 'oneshot')")
+
+    # Raw (T, R) array or chunk provider.
+    if engine == "oneshot":
+        if callable(target):
+            raise ValueError(
+                "engine='oneshot' needs a materialized (T, R) array "
+                "(chunk providers stream via engine='host')")
+        _reject_stream_options(
+            so, "oneshot", "state", "start_sample", "stop_sample",
+            "total_samples")
+        return _condition_fleet_impl(cfg, target, spec, **kwargs)
+    if engine == "host":
+        _reject_stream_options(so, "host", "start_sample", "stop_sample")
+        return _condition_fleet_streaming_impl(
+            cfg, target, spec, mesh=mesh, rack_axis=rack_axis,
+            chunk_intervals=so.chunk_intervals, state=so.state,
+            total_samples=so.total_samples, **kwargs,
+        )
+    if engine == "scanned":
+        raise ValueError(
+            "engine='scanned' renders a declarative Scenario/GridRegion "
+            "in-jit; raw trace arrays and chunk providers stream via "
+            "engine='host' (or engine='oneshot' for materialized arrays)")
+    raise ValueError(
+        f"unknown engine {engine!r} (expected 'scanned', 'host' or 'oneshot')")
+
+
+# -------------------------------------------------- deprecated entry points
+# Thin wrappers over ``condition`` (golden-tested bitwise against it); kept
+# so seven PRs of call sites keep working.  Prefer the facade in new code.
+
+
+def condition_fleet(
+    cfg: pdu.PDUConfig,
+    traces: jax.Array,
+    grid_spec: compliance.GridSpec,
+    *,
+    soc0: float = 0.5,
+    qp_iters: int = 60,
+    use_plan: bool = True,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
+) -> ConditioningResult:
+    """One-shot whole-trace conditioning of a (T, R) rack-trace array.
+
+    .. deprecated:: prefer ``condition(traces, cfg, spec, engine="oneshot")``.
+    """
+    return condition(
+        traces, cfg, grid_spec, engine="oneshot", soc0=soc0,
+        qp_iters=qp_iters, use_plan=use_plan,
+        ess_online=ess_online, ess_weight=ess_weight,
+    )
+
+
+def condition_fleet_streaming(
+    cfg: pdu.PDUConfig,
+    traces: jax.Array | Callable[[int, int], jax.Array],
+    grid_spec: compliance.GridSpec,
+    *,
+    soc0: float = 0.5,
+    qp_iters: int = 30,
+    chunk_intervals: int = 16,
+    total_samples: int | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+    state: pdu.PDUState | None = None,
+    ess_online: jax.Array | None = None,
+    ess_weight: jax.Array | None = None,
+) -> ConditioningResult:
+    """Host-loop streaming over a (T, R) array or chunk provider.
+
+    .. deprecated:: prefer ``condition(traces, cfg, spec, engine="host",
+       stream=StreamOptions(...))``.
+    """
+    return condition(
+        traces, cfg, grid_spec, engine="host", mesh=mesh, rack_axis=rack_axis,
+        stream=StreamOptions(chunk_intervals=chunk_intervals, state=state,
+                             total_samples=total_samples),
+        soc0=soc0, qp_iters=qp_iters,
+        ess_online=ess_online, ess_weight=ess_weight,
+    )
+
+
+def condition_scenario_scanned(
+    cfg: pdu.PDUConfig,
+    scenario,
+    grid_spec: compliance.GridSpec,
+    *,
+    soc0: float = 0.5,
+    qp_iters: int = 30,
+    chunk_intervals: int = 16,
+    mesh: jax.sharding.Mesh | None = None,
+    rack_axis: str = "data",
+    state: pdu.PDUState | None = None,
+    start_sample: int = 0,
+    stop_sample: int | None = None,
+) -> ConditioningResult:
+    """Scenario via the scanned engine (render + condition in one jit).
+
+    .. deprecated:: prefer ``condition(scenario, cfg, spec)`` — the facade
+       defaults to this engine.
+    """
+    return condition(
+        scenario, cfg, grid_spec, engine="scanned", mesh=mesh,
+        rack_axis=rack_axis,
+        stream=StreamOptions(chunk_intervals=chunk_intervals, state=state,
+                             start_sample=start_sample,
+                             stop_sample=stop_sample),
+        soc0=soc0, qp_iters=qp_iters,
+    )
+
+
 def condition_scenario_streaming(
     cfg: pdu.PDUConfig,
     scenario,
@@ -713,70 +1084,24 @@ def condition_scenario_streaming(
     *,
     engine: str = "scanned",
     **kwargs,
-) -> StreamingFleetResult:
+) -> ConditioningResult:
     """Condition a declarative ``repro.power.scenario.Scenario`` fleet.
 
-    Chunks are synthesized on-device and conditioned in place, so
-    campus-scale heterogeneous fleets (per-rack model workloads, staggered
-    starts, fault cascades, diurnal inference blocks) stream end-to-end
-    without a (T, R) host materialization.  ``engine="scanned"`` (default)
-    fuses rendering and the chunk loop into one scanned jit
-    (``condition_scenario_scanned``); ``engine="host"`` keeps the per-chunk
-    host loop (``condition_fleet_streaming`` with the scenario's chunk
-    provider) — the two are bit-identical, the host loop is just the slow
-    oracle for equivalence tests.
+    .. deprecated:: prefer ``condition(scenario, cfg, spec,
+       engine="scanned"|"host")``.
     """
-    from repro.power import scenario as SC
-
-    if engine == "scanned":
-        return condition_scenario_scanned(cfg, scenario, grid_spec, **kwargs)
-    if engine != "host":
-        raise ValueError(f"unknown engine {engine!r} (expected 'scanned' or 'host')")
-    _check_scenario_rate(scenario, cfg)
-    _check_scenario_faults(scenario, cfg)
-    if cfg.degraded_mode and getattr(scenario, "faults", None) is not None:
-        # The host engine takes the availability mask as data: precompute
-        # the full per-interval rows from the schedule (same pure function
-        # the scanned engine evaluates in-jit, so the two stay bitwise
-        # identical under any fault schedule).
-        from repro.power import faults as FLT
-
-        k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
-        n_ctrl = -(-scenario.total_samples // k)
-        kwargs.setdefault(
-            "ess_online", FLT.interval_online(scenario.faults, 0, n_ctrl, k)
-        )
-        kwargs.setdefault(
-            "ess_weight",
-            FLT.ess_weight(
-                scenario.faults, 0, scenario.total_samples, scenario.edge_width
-            ),
-        )
-    return condition_fleet_streaming(
-        cfg,
-        SC.chunk_provider(scenario),
-        grid_spec,
-        total_samples=scenario.total_samples,
-        **kwargs,
+    if engine not in ("scanned", "host"):
+        raise ValueError(
+            f"unknown engine {engine!r} (expected 'scanned' or 'host')")
+    stream = StreamOptions(
+        chunk_intervals=kwargs.pop("chunk_intervals", 16),
+        state=kwargs.pop("state", None),
+        start_sample=kwargs.pop("start_sample", 0),
+        stop_sample=kwargs.pop("stop_sample", None),
     )
-
-
-def shard_racks(traces: jax.Array, mesh: jax.sharding.Mesh, axis: str = "data") -> jax.Array:
-    """Place the rack axis of a host-resident (T, R) trace array across a
-    mesh axis (``device_put``) so fleet conditioning runs data-parallel
-    across devices.  Inside a jit, use ``shard_racks_in_jit`` instead —
-    arrays already on device never need the host staging this call forces."""
-    spec = jax.sharding.PartitionSpec(None, axis)
-    return jax.device_put(traces, jax.sharding.NamedSharding(mesh, spec))
-
-
-def shard_racks_in_jit(
-    traces: jax.Array, mesh: jax.sharding.Mesh, axis: str = "data"
-) -> jax.Array:
-    """In-jit variant of ``shard_racks``: expresses the rack sharding as a
-    ``with_sharding_constraint`` against an explicit mesh, so streamed
-    chunks (rendered or passed as jit arguments) are partitioned by GSPMD
-    without a per-chunk host ``device_put`` round-trip."""
-    from repro.sharding import rules
-
-    return rules.constrain_to_mesh(traces, mesh, None, axis)
+    return condition(
+        scenario, cfg, grid_spec, engine=engine,
+        mesh=kwargs.pop("mesh", None),
+        rack_axis=kwargs.pop("rack_axis", "data"),
+        stream=stream, **kwargs,
+    )

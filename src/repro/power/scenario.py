@@ -182,6 +182,12 @@ class Scenario:
     # the ESS-trip channel is consumed by the fleet engines' per-interval
     # availability mask.  None = fault-free.
     faults: object | None = None
+    # Optional uint32 scalar XORed into the noise lane hash — a *traced*
+    # leaf, so campuses stacked for the sharded grid-region engine (which
+    # must share every static field, including ``noise_seed``) can still
+    # draw decorrelated measurement noise.  None keeps the legacy stream
+    # bit-for-bit (see ``with_noise_salt``).
+    noise_salt: jax.Array | None = None
     sample_hz: float = static_field(default=1000.0)
     total_samples: int = static_field(default=0)
     # Edge smoothing window in samples (0/1 = off): steps become linear
@@ -291,6 +297,20 @@ def attach_faults(
             f"has {n}"
         )
     return s.replace(faults=sched)
+
+
+def with_noise_salt(s: Scenario, salt: int | jax.Array) -> Scenario:
+    """Return ``s`` drawing a decorrelated measurement-noise stream.
+
+    The salt is a *traced* uint32 leaf XORed into the counter hash's lane
+    seed, so scenarios that must share every static field (campuses stacked
+    for the sharded grid-region engine share one ``noise_seed`` aux datum)
+    still get independent noise.  A scenario without noise is returned
+    unchanged — salting silence would only force a treedef change.
+    """
+    if s.noise_seed is None:
+        return s
+    return s.replace(noise_salt=jnp.asarray(salt, jnp.uint32))
 
 
 def _edge_width(edge_time_s: float, sample_hz: float) -> int:
@@ -431,7 +451,7 @@ def _fmix32(x: jax.Array) -> jax.Array:
 
 
 def _hash_normal(
-    seed: int, idx: jax.Array, tail: tuple[int, ...]
+    seed: int, idx: jax.Array, tail: tuple[int, ...], salt: jax.Array | None = None
 ) -> jax.Array:
     """Counter-hashed standard-normal measurement noise, pure in the
     absolute sample index.
@@ -445,13 +465,21 @@ def _hash_normal(
     render time (threefry's 20-round block cipher is the wrong tool for
     measurement noise — any full-avalanche counter hash gives the same
     chunk-bitwise contract).  ``u`` is centered to ``[2^-25, 1 - 2^-25]``
-    so ``erfinv`` never sees ``+/-1``."""
+    so ``erfinv`` never sees ``+/-1``.
+
+    ``salt`` (a traced uint32 scalar) is XORed into the per-rack lane seed
+    before the avalanche mix, giving a decorrelated stream per salt value
+    at zero extra per-sample cost; ``salt=None`` is bitwise-identical to
+    the unsalted path."""
     s = jnp.uint32(seed)
     r = tail[0] if tail else 1
-    lane = _fmix32(
+    lane_seed = (
         jnp.arange(r, dtype=jnp.uint32) * jnp.uint32(0x9E3779B9)
         ^ (s * jnp.uint32(0x85EBCA6B) + jnp.uint32(0x2545F491))
     )
+    if salt is not None:
+        lane_seed = lane_seed ^ jnp.asarray(salt, jnp.uint32)
+    lane = _fmix32(lane_seed)
     h = _fmix32(idx.astype(jnp.uint32)[:, None] ^ lane[None, :])
     u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
     u = u + jnp.float32(2.0**-25)
@@ -507,7 +535,7 @@ def _render_impl(s: Scenario, t0: jax.Array, n: int) -> jax.Array:
         p = p + wgt * (pf - p)
 
     if s.noise_seed is not None:
-        noise = _hash_normal(s.noise_seed, idx, p.shape[1:])
+        noise = _hash_normal(s.noise_seed, idx, p.shape[1:], s.noise_salt)
         if wp is not None:
             std = wp.noise_std
         else:

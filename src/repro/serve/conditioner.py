@@ -1,14 +1,21 @@
 """Resume-safe operator service for the power conditioner (ISSUE 6).
 
-``ConditionerService`` wraps the scanned streaming engine
-(``fleet.condition_scenario_scanned``) in the loop a campus operator
-actually runs: advance the stream window by window, checkpoint the carried
-``PDUState`` at controller-interval boundaries, restore after a crash and
-continue with *bitwise identical* downstream telemetry, and keep an
-append-only JSONL audit log of everything that happened — scheduled
-faults/repairs from the scenario's fault schedule, degraded-mode entry and
-exit, manual ESS trips injected by the operator, compliance verdicts, and
+``ConditionerService`` wraps the scanned streaming engine (via the
+``fleet.condition`` facade) in the loop a campus operator actually runs:
+advance the stream window by window, checkpoint the carried ``PDUState``
+at controller-interval boundaries, restore after a crash and continue
+with *bitwise identical* downstream telemetry, and keep an append-only
+JSONL audit log of everything that happened — scheduled faults/repairs
+from the scenario's fault schedule, degraded-mode entry and exit, manual
+ESS trips injected by the operator, compliance verdicts, and
 checkpoint/restore events.
+
+The service also runs whole grid regions (``core.grid.GridRegion``): the
+carried state becomes the tuple of per-campus ``PDUState``s, rack indices
+in ``inject_fault``/``clear_fault`` are global across the region (mapped
+to (campus, local) internally), ``status()`` grows POI and per-campus
+aggregates, and wide-area mode-band violations land in the audit log as
+first-class ``mode_band_violation`` events.
 
 Resume safety comes from two facts the engines already guarantee:
 
@@ -68,9 +75,13 @@ class AuditLog:
 class ConditionerService:
     """Operator loop over the scanned conditioning engine.
 
-    Parameters mirror ``fleet.condition_scenario_scanned``; the service
-    owns the carried ``PDUState`` and the absolute stream position (in
-    samples), both of which ride in checkpoints.
+    ``scenario`` may be a single ``power.scenario.Scenario`` (one campus)
+    or a ``core.grid.GridRegion`` (N campuses aggregated at a POI); both
+    run through the ``fleet.condition`` facade.  The service owns the
+    carried state — one ``PDUState``, or a tuple of per-campus states for
+    a region — and the absolute stream position (in samples), both of
+    which ride in checkpoints.  ``mesh`` (optional, regions only) runs
+    the campuses in parallel under ``shard_map``.
     """
 
     def __init__(
@@ -82,37 +93,68 @@ class ConditionerService:
         chunk_intervals: int = 16,
         qp_iters: int = 30,
         soc0: float = 0.5,
+        mesh=None,
         audit_path: str | os.PathLike | None = None,
     ):
         from repro.core.fleet import _check_scenario_faults, _check_scenario_rate
         from repro.power import scenario as SC
 
-        _check_scenario_rate(scenario, cfg)
-        _check_scenario_faults(scenario, cfg)
         self.cfg = cfg
         self.scenario = scenario
         self.grid_spec = grid_spec
         self.chunk_intervals = int(chunk_intervals)
         self.qp_iters = int(qp_iters)
+        self.mesh = mesh
         self._k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
         self.sample_pos = 0
         self.audit = AuditLog(audit_path)
         self._degraded_now = False
-        self._last_result: fleet.StreamingFleetResult | None = None
+        self._last_result: fleet.ConditioningResult | None = None
+        self._is_region = hasattr(scenario, "campuses")
 
-        r0 = SC.render(scenario, 0, 1)[0]
-        if r0.ndim == 0:
-            r0 = r0[None]
-        self.state = pdu.init_state(cfg, r0, soc0=soc0)
-        self.n_racks = int(np.asarray(self.state.ess_online).shape[0])
+        if self._is_region:
+            campuses = scenario.campuses
+            states = []
+            for c in campuses:
+                _check_scenario_rate(c, cfg)
+                _check_scenario_faults(c, cfg)
+                r0 = SC.render(c, 0, 1)[0]
+                if r0.ndim == 0:
+                    r0 = r0[None]
+                states.append(pdu.init_state(cfg, r0, soc0=soc0))
+            self.state = tuple(states)
+            self._campus_racks = [
+                int(np.asarray(st.ess_online).shape[0]) for st in states
+            ]
+            self._campus_offsets = np.concatenate(
+                [[0], np.cumsum(self._campus_racks)]
+            ).astype(np.int64)
+            self.n_racks = int(self._campus_offsets[-1])
+            has_faults = any(
+                getattr(c, "faults", None) is not None for c in campuses
+            )
+        else:
+            if mesh is not None:
+                raise ValueError(
+                    "mesh is only meaningful for GridRegion targets"
+                )
+            _check_scenario_rate(scenario, cfg)
+            _check_scenario_faults(scenario, cfg)
+            r0 = SC.render(scenario, 0, 1)[0]
+            if r0.ndim == 0:
+                r0 = r0[None]
+            self.state = pdu.init_state(cfg, r0, soc0=soc0)
+            self.n_racks = int(np.asarray(self.state.ess_online).shape[0])
+            has_faults = getattr(scenario, "faults", None) is not None
         self.audit.append(
             "service_start",
             sample=0,
             n_racks=self.n_racks,
+            n_campuses=scenario.n_campuses if self._is_region else 1,
             total_samples=int(scenario.total_samples),
             sample_hz=float(scenario.sample_hz),
             degraded_mode=bool(cfg.degraded_mode),
-            has_fault_schedule=getattr(scenario, "faults", None) is not None,
+            has_fault_schedule=has_faults,
         )
 
     # ------------------------------------------------------------- position
@@ -127,14 +169,14 @@ class ConditionerService:
 
     # -------------------------------------------------------------- advance
 
-    def advance(self, n_intervals: int | None = None) -> fleet.StreamingFleetResult:
+    def advance(self, n_intervals: int | None = None) -> fleet.ConditioningResult:
         """Condition the next ``n_intervals`` controller intervals.
 
         Defaults to one chunk (``chunk_intervals``); fixed-size windows
         reuse one cached compiled engine, so steady-state advancing never
-        retraces.  Returns the window's ``StreamingFleetResult`` and logs
+        retraces.  Returns the window's ``ConditioningResult`` and logs
         the window's scheduled fault/repair edges, degraded entry/exit,
-        and the compliance verdict.
+        the compliance verdict, and (regions) mode-band violations.
         """
         if self.exhausted:
             raise RuntimeError(
@@ -145,15 +187,18 @@ class ConditionerService:
             raise ValueError(f"n_intervals must be positive, got {n}")
         start = self.sample_pos
         stop = min(start + n * self._k, int(self.scenario.total_samples))
-        res = fleet.condition_scenario_scanned(
-            self.cfg,
+        res = fleet.condition(
             self.scenario,
+            self.cfg,
             self.grid_spec,
+            mesh=self.mesh,
+            stream=fleet.StreamOptions(
+                chunk_intervals=self.chunk_intervals,
+                state=self.state,
+                start_sample=start,
+                stop_sample=stop,
+            ),
             qp_iters=self.qp_iters,
-            chunk_intervals=self.chunk_intervals,
-            state=self.state,
-            start_sample=start,
-            stop_sample=stop,
         )
         self.state = res.state
         self.sample_pos = stop
@@ -161,13 +206,25 @@ class ConditionerService:
         self._log_window(start, stop, res)
         return res
 
-    def _log_window(self, start: int, stop: int, res: fleet.StreamingFleetResult):
-        sched = getattr(self.scenario, "faults", None)
-        if sched is not None:
-            from repro.power import faults as FLT
+    def _log_window(self, start: int, stop: int, res: fleet.ConditioningResult):
+        from repro.power import faults as FLT
 
-            for ev in FLT.episodes_in_window(sched, start, stop):
-                self.audit.append(**ev)
+        if self._is_region:
+            for c, scen in enumerate(self.scenario.campuses):
+                sched = getattr(scen, "faults", None)
+                if sched is None:
+                    continue
+                off = int(self._campus_offsets[c])
+                for ev in FLT.episodes_in_window(sched, start, stop):
+                    ev["rack"] += off
+                    self.audit.append(
+                        campus=self.scenario.names[c], **ev
+                    )
+        else:
+            sched = getattr(self.scenario, "faults", None)
+            if sched is not None:
+                for ev in FLT.episodes_in_window(sched, start, stop):
+                    self.audit.append(**ev)
         frac = np.asarray(res.ess_online_frac)
         degraded = bool(frac.size) and float(frac.min()) < 1.0
         if degraded and not self._degraded_now:
@@ -177,10 +234,13 @@ class ConditionerService:
         elif self._degraded_now and not degraded:
             self.audit.append("degraded_exit", sample=start)
         self._degraded_now = degraded
-        ramp_ok = bool(np.asarray(res.report_grid.ramp_ok))
-        spec_ok = bool(np.asarray(res.report_grid.spectrum_ok))
-        self.audit.append(
-            "window",
+        rep = res.report_grid
+        ramp_ok = bool(np.asarray(rep.ramp_ok))
+        spec_ok = bool(np.asarray(rep.spectrum_ok))
+        modes_ok = (
+            bool(np.asarray(rep.modes_ok)) if rep.modes_ok is not None else True
+        )
+        window = dict(
             sample=start,
             stop=stop,
             ramp_ok=ramp_ok,
@@ -188,10 +248,25 @@ class ConditionerService:
             min_online_frac=float(frac.min()) if frac.size else 1.0,
             max_qp_residual=float(np.asarray(res.max_qp_residual)),
         )
-        if not (ramp_ok and spec_ok):
+        if rep.modes_ok is not None:
+            window["modes_ok"] = modes_ok
+        self.audit.append("window", **window)
+        if rep.mode_ok is not None and self._is_region:
+            mode_ok = np.asarray(rep.mode_ok)
+            mags = np.asarray(rep.mode_mags)
+            for i, band in enumerate(self.scenario.bands):
+                if not bool(mode_ok[i]):
+                    self.audit.append(
+                        "mode_band_violation", sample=start, stop=stop,
+                        band=band.name, lo_hz=float(band.lo_hz),
+                        hi_hz=float(band.hi_hz),
+                        magnitude=float(mags[i]),
+                        threshold=float(band.threshold),
+                    )
+        if not (ramp_ok and spec_ok and modes_ok):
             self.audit.append(
                 "compliance_violation", sample=start, stop=stop,
-                ramp_ok=ramp_ok, spectrum_ok=spec_ok,
+                ramp_ok=ramp_ok, spectrum_ok=spec_ok, modes_ok=modes_ok,
             )
 
     # ----------------------------------------------------- manual overrides
@@ -205,9 +280,7 @@ class ConditionerService:
         addition to) the scenario's stochastic schedule.
         """
         racks = self._check_racks(racks)
-        self.state = self.state._replace(
-            ess_online=self.state.ess_online.at[jnp.asarray(racks)].set(0.0)
-        )
+        self._set_ess_online(racks, 0.0)
         self.audit.append(
             "manual_fault_injected", sample=self.sample_pos, racks=racks,
             reason=reason,
@@ -216,12 +289,26 @@ class ConditionerService:
     def clear_fault(self, racks: Sequence[int] | int):
         """Return manually tripped racks to service."""
         racks = self._check_racks(racks)
-        self.state = self.state._replace(
-            ess_online=self.state.ess_online.at[jnp.asarray(racks)].set(1.0)
-        )
+        self._set_ess_online(racks, 1.0)
         self.audit.append(
             "manual_fault_cleared", sample=self.sample_pos, racks=racks
         )
+
+    def _set_ess_online(self, racks: list[int], value: float) -> None:
+        if not self._is_region:
+            self.state = self.state._replace(
+                ess_online=self.state.ess_online.at[jnp.asarray(racks)].set(value)
+            )
+            return
+        # Region: global rack index -> (campus, local) through the offsets.
+        states = list(self.state)
+        for r in racks:
+            c = int(np.searchsorted(self._campus_offsets, r, side="right")) - 1
+            local = r - int(self._campus_offsets[c])
+            states[c] = states[c]._replace(
+                ess_online=states[c].ess_online.at[local].set(value)
+            )
+        self.state = tuple(states)
 
     def _check_racks(self, racks) -> list[int]:
         racks = [int(r) for r in np.atleast_1d(np.asarray(racks, dtype=np.int64))]
@@ -290,10 +377,19 @@ class ConditionerService:
     # --------------------------------------------------------------- status
 
     def status(self) -> dict:
-        """JSON-safe streaming snapshot for dashboards/health endpoints."""
-        manual_off = [
-            int(i) for i in np.flatnonzero(np.asarray(self.state.ess_online) <= 0.0)
-        ]
+        """JSON-safe streaming snapshot for dashboards/health endpoints.
+
+        For a grid region the snapshot additionally carries the POI view
+        of the last window (peak power, frequency/voltage excursions,
+        per-band mode magnitudes and verdicts) and per-campus aggregates.
+        """
+        if self._is_region:
+            online = np.concatenate(
+                [np.asarray(st.ess_online) for st in self.state]
+            )
+        else:
+            online = np.asarray(self.state.ess_online)
+        manual_off = [int(i) for i in np.flatnonzero(online <= 0.0)]
         out = dict(
             sample_pos=self.sample_pos,
             position_s=self.position_s,
@@ -304,19 +400,67 @@ class ConditionerService:
             manual_offline_racks=manual_off,
             audit_events=len(self.audit),
         )
+        if self._is_region:
+            out["region"] = dict(
+                n_campuses=int(self.scenario.n_campuses),
+                campus_names=list(self.scenario.names),
+                campus_racks=list(self._campus_racks),
+            )
         res = self._last_result
         if res is not None:
             frac = np.asarray(res.ess_online_frac)
-            out.update(
-                last_window=dict(
-                    ramp_ok=bool(np.asarray(res.report_grid.ramp_ok)),
-                    spectrum_ok=bool(np.asarray(res.report_grid.spectrum_ok)),
-                    min_online_frac=float(frac.min()) if frac.size else 1.0,
-                    mean_online_frac=float(frac.mean()) if frac.size else 1.0,
-                    max_qp_residual=float(np.asarray(res.max_qp_residual)),
-                ),
-                health=hlt.fleet_summary(res.health, json_safe=True),
+            rep = res.report_grid
+            last = dict(
+                ramp_ok=bool(np.asarray(rep.ramp_ok)),
+                spectrum_ok=bool(np.asarray(rep.spectrum_ok)),
+                min_online_frac=float(frac.min()) if frac.size else 1.0,
+                mean_online_frac=float(frac.mean()) if frac.size else 1.0,
+                max_qp_residual=float(np.asarray(res.max_qp_residual)),
             )
+            out["last_window"] = last
+            if self._is_region:
+                last["modes_ok"] = (
+                    bool(np.asarray(rep.modes_ok))
+                    if rep.modes_ok is not None else True
+                )
+                mags = np.asarray(rep.mode_mags)
+                mode_ok = np.asarray(rep.mode_ok)
+                out["poi"] = dict(
+                    peak_power_pu=float(np.max(np.asarray(res.poi_grid))),
+                    max_freq_dev_hz=float(
+                        np.max(np.abs(np.asarray(res.poi_freq_dev)))
+                    ),
+                    max_volt_dev=float(
+                        np.max(np.abs(np.asarray(res.poi_volt_dev)))
+                    ),
+                    mode_bands=[
+                        dict(
+                            band=b.name,
+                            magnitude=float(mags[i]),
+                            threshold=float(b.threshold),
+                            ok=bool(mode_ok[i]),
+                        )
+                        for i, b in enumerate(self.scenario.bands)
+                    ],
+                )
+                camp_grid = np.asarray(res.campus_grid)
+                camp_frac = np.asarray(res.ess_online_frac)
+                out["campuses"] = [
+                    dict(
+                        name=self.scenario.names[c],
+                        n_racks=int(self._campus_racks[c]),
+                        weight=float(np.asarray(res.weights)[c]),
+                        peak_power_pu=float(camp_grid[c].max()),
+                        min_online_frac=float(camp_frac[c].min())
+                        if camp_frac.size else 1.0,
+                        ramp_ok=bool(
+                            np.asarray(res.per_campus[c].report_grid.ramp_ok)
+                        ),
+                    )
+                    for c in range(int(self.scenario.n_campuses))
+                ]
+            else:
+                out["health"] = hlt.fleet_summary(res.health, json_safe=True)
         # Strict-JSON guarantee: this must always survive allow_nan=False.
         json.dumps(out, allow_nan=False)
         return out

@@ -251,6 +251,81 @@ def constrain_to_mesh(x: jax.Array, mesh: Mesh, *spec) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, cleaned))
 
 
+def shard_racks(traces: jax.Array, mesh: Mesh, axis: str = "data") -> jax.Array:
+    """Place the rack axis of a host-resident (T, R) trace array across a
+    mesh axis (``device_put``) so fleet conditioning runs data-parallel
+    across devices.  Inside a jit, use ``shard_racks_in_jit`` instead —
+    arrays already on device never need the host staging this call forces.
+
+    (Moved here from ``core.fleet``: these are mesh utilities, not fleet
+    logic; ``fleet`` re-exports both names for compatibility.)"""
+    return jax.device_put(traces, NamedSharding(mesh, P(None, axis)))
+
+
+def shard_racks_in_jit(
+    traces: jax.Array, mesh: Mesh, axis: str = "data"
+) -> jax.Array:
+    """In-jit variant of ``shard_racks``: expresses the rack sharding as a
+    ``with_sharding_constraint`` against an explicit mesh, so streamed
+    chunks (rendered or passed as jit arguments) are partitioned by GSPMD
+    without a per-chunk host ``device_put`` round-trip."""
+    return constrain_to_mesh(traces, mesh, None, axis)
+
+
+# --------------------------------------------------------------- shard_map --
+
+try:  # jax >= 0.6 exposes it at the top level
+    _shard_map = jax.shard_map  # type: ignore[attr-defined]
+except AttributeError:  # pragma: no cover - depends on the installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs, *, check_rep=False):
+    """``shard_map`` across the export-location API drift.
+
+    ``check_rep=False`` is the repo default: the grid-region engine returns
+    ``psum``-reduced POI aggregates under ``out_specs=P()`` — genuinely
+    replicated, but the 0.4.x replication checker cannot prove it through
+    ``lax.scan`` carries.  Do NOT pass ``auto=`` axes or call
+    ``with_sharding_constraint`` inside the mapped body: on jax 0.4.x that
+    combination aborts the *process* inside XLA's SPMD partitioner
+    (``Check failed: sharding.IsManualSubgroup()``) — it is not a catchable
+    error, so there is no runtime fallback (EXPERIMENTS §Grid-region).
+    """
+    return _shard_map(
+        f, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_rep
+    )
+
+
+def region_mesh(
+    n_campuses: int,
+    *,
+    campus_axis: str = "campus",
+    rack_axis: str = "data",
+    devices=None,
+) -> Mesh:
+    """2-D (campus, data) mesh over the available devices.
+
+    The campus axis gets exactly ``n_campuses`` shards (one campus per
+    shard keeps the in-scan ``psum`` reduction order equal to the
+    sequential left-to-right campus sum — the bitwise-parity contract);
+    every remaining device folds into the trailing rack/data axis.
+    """
+    devs = list(devices) if devices is not None else jax.devices()
+    if n_campuses <= 0:
+        raise ValueError(f"n_campuses must be positive, got {n_campuses}")
+    if len(devs) % n_campuses:
+        raise ValueError(
+            f"{len(devs)} devices do not tile {n_campuses} campuses; pass "
+            "an explicit device subset whose size is a campus multiple"
+        )
+    return make_mesh(
+        (n_campuses, len(devs) // n_campuses),
+        (campus_axis, rack_axis),
+        devices=np.asarray(devs),
+    )
+
+
 def constrain_activations(x: jax.Array) -> jax.Array:
     """Standard (B, T, D) activation constraint: batch on ("pod","data")."""
     return maybe_constrain(x, ("pod", "data"))
