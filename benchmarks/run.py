@@ -161,6 +161,12 @@ def main() -> None:
             )
 
     if args.gate is not None:
+        # A gated run also fails on bench-internal assertion errors (e.g.
+        # the safe-mode supervision-overhead budget), not just timing
+        # regressions vs the baseline.
+        if failures:
+            print(f"\n# PERF GATE FAILED ({failures} bench(es) errored)")
+            sys.exit(1)
         gate_failures = gate_records(records, baseline, args.gate, quick)
         if gate_failures:
             print(f"\n# PERF GATE FAILED (>{args.gate:.0f}% regression):")

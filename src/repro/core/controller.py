@@ -472,6 +472,23 @@ def init_warm(
     )
 
 
+def reset_warm_where(warm: QPWarmState, reset: jax.Array) -> QPWarmState:
+    """Zero the ADMM iterates of the masked entries (cold start).
+
+    ``reset`` carries the batch shape; it broadcasts against the leading
+    iterate axis of each ``(n_iterates, *batch)`` leaf.  Shared by the
+    degraded-mode QP admission mask and the safe-mode supervisor, so "this
+    rack re-enters with a valid cold start" means the same thing on every
+    path.  An all-false mask is bitwise identity.
+    """
+    keep = ~reset.astype(bool)
+    return QPWarmState(
+        x=jnp.where(keep, warm.x, 0.0),
+        z=jnp.where(keep, warm.z, 0.0),
+        y=jnp.where(keep, warm.y, 0.0),
+    )
+
+
 class ControllerOutput(NamedTuple):
     corrective_power: jax.Array  # applied first action (fraction of rated)
     s_target: jax.Array
@@ -567,11 +584,7 @@ def inner_loop_step_plan(
     if act is not None:
         i0 = jnp.where(act, i0, 0.0)
         resid = jnp.where(act, resid, 0.0)
-        w2 = QPWarmState(
-            x=jnp.where(act, w2.x, 0.0),
-            z=jnp.where(act, w2.z, 0.0),
-            y=jnp.where(act, w2.y, 0.0),
-        )
+        w2 = reset_warm_where(w2, ~act)
 
     def back(a):
         return jnp.reshape(a, batch_shape) if batch_shape else a

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, health as hlt, pdu
+from repro.core import compliance, health as hlt, pdu, safemode as smode
 from repro.sharding.rules import shard_racks, shard_racks_in_jit  # noqa: F401
 # (mesh utilities live in ``sharding.rules`` now; re-exported here for
 # compatibility — ``fleet.shard_racks`` keeps working.)
@@ -109,6 +109,10 @@ class ConditioningResult(NamedTuple):
     # (n_ctrl,) fraction of ESS units online per control interval (ones
     # unless the cfg runs degraded_mode under a fault schedule).
     ess_online_frac: jax.Array = None
+    # (n_chunks, 6) safe-mode supervisor snapshot per chunk — the
+    # ``pdu.CampusChunk.safemode`` rows (zeros unless the cfg runs
+    # safemode; grid regions carry a leading campus axis).
+    safemode_trace: jax.Array = None
     # --- grid-region extras (``core.grid``)
     poi_rack: jax.Array = None  # (T,) POI unconditioned (weighted campus sum)
     poi_grid: jax.Array = None  # (T,) POI conditioned
@@ -149,6 +153,39 @@ class ConditioningResult(NamedTuple):
         if pre is not None and pre.mode_mags is not None:
             rep = compliance.with_mode_verdicts(rep, pre.mode_mags, pre.mode_ok)
         return rep
+
+    def safemode_summary(self) -> dict | None:
+        """Host-side safe-mode supervisor summary from the final state(s).
+
+        ``None`` when the engine carried no state or the config did not run
+        safemode; a grid region sums the per-campus states and keys the
+        rack lists by campus index.
+        """
+        if self.state is None:
+            return None
+        # NB: PDUState is itself a NamedTuple — only a *plain* tuple means
+        # a grid region's per-campus states.
+        states = (
+            (self.state,)
+            if isinstance(self.state, pdu.PDUState)
+            else tuple(self.state)
+        )
+        if any(getattr(st, "safemode", None) is None for st in states):
+            return None
+        parts = [smode.summary(st.safemode) for st in states]
+        out = dict(parts[0])
+        if len(parts) > 1:
+            for key in ("n_normal", "n_passthrough", "n_quarantined",
+                        "passthrough_entries", "quarantine_entries",
+                        "readmissions"):
+                out[key] = sum(p[key] for p in parts)
+            out["worst_resid_streak"] = max(
+                p["worst_resid_streak"] for p in parts)
+            out["passthrough_racks"] = {
+                c: p["passthrough_racks"] for c, p in enumerate(parts)}
+            out["quarantined_racks"] = {
+                c: p["quarantined_racks"] for c, p in enumerate(parts)}
+        return out
 
 
 # Deprecated aliases: every engine returns ``ConditioningResult`` now, with
@@ -207,6 +244,10 @@ def _condition_fleet_impl(
             _health_params(cfg), cfg.ess_params, state_f.health, cfg.sample_dt
         ),
         ess_online_frac=on_frac,
+        safemode_trace=(
+            smode.chunk_snapshot(state_f.safemode)[None]
+            if cfg.safemode else jnp.zeros((1, 6), jnp.float32)
+        ),
     )
 
 
@@ -266,6 +307,7 @@ class _CampusAccum(NamedTuple):
     worst: jax.Array  # () running max QP primal residual
     health_trace: jax.Array  # (n_chunks, 3) fleet wear snapshot per chunk
     ess_frac: jax.Array  # (n_chunks * chunk_intervals,) online fraction
+    sm_trace: jax.Array  # (n_chunks, 6) safe-mode snapshot per chunk
     obs: _Observers  # streaming compliance state
 
 
@@ -357,6 +399,9 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
                 ess_frac=jax.lax.dynamic_update_slice(
                     acc.ess_frac, ch.ess_online_frac, (c_idx * n_int,)
                 ),
+                sm_trace=jax.lax.dynamic_update_slice(
+                    acc.sm_trace, ch.safemode[None], (c_idx, 0)
+                ),
                 obs=_observers_update(acc.obs, bank, ch, cfg.sample_dt),
             )
             return st2, acc2
@@ -383,7 +428,7 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
 
 def _finish_streaming(
     cfg, grid_spec, state, campus_rack, campus_grid, soc_mean, worst,
-    bank, obs, health_trace, ess_frac=None,
+    bank, obs, health_trace, ess_frac=None, sm_trace=None,
 ):
     """Assemble the result from streaming state: the compliance reports
     come from the cross-chunk observers (exact ramp, Goertzel spec lines),
@@ -408,6 +453,7 @@ def _finish_streaming(
             _health_params(cfg), cfg.ess_params, state.health, cfg.sample_dt
         ),
         ess_online_frac=ess_frac,
+        safemode_trace=sm_trace,
         grid_spec=grid_spec,
         bank=bank,
         observers=obs,
@@ -505,6 +551,7 @@ def _condition_fleet_streaming_impl(
         worst=jnp.zeros((), jnp.float32),
         health_trace=jnp.zeros((n_chunks, 3), jnp.float32),
         ess_frac=jnp.ones((n_chunks * n_int,), jnp.float32),
+        sm_trace=jnp.zeros((n_chunks, 6), jnp.float32),
         obs=_observers_init(bank),
     )
     for c_idx, t0 in enumerate(range(0, t_total, chunk)):
@@ -536,6 +583,7 @@ def _condition_fleet_streaming_impl(
         acc.campus_rack[:t_total], acc.campus_grid[:t_total],
         acc.soc_mean[:n_ctrl], acc.worst,
         bank, acc.obs, acc.health_trace, acc.ess_frac[:n_ctrl],
+        acc.sm_trace,
     )
 
 
@@ -626,6 +674,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
             parts = []
             worst = []
             htrace = []
+            strace = []
             if n_full:
                 (st, obs), ch = jax.lax.scan(
                     body, (st, obs), jnp.arange(n_full, dtype=jnp.int32)
@@ -637,6 +686,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
                 ))
                 worst.append(jnp.max(ch.max_qp_residual))
                 htrace.append(ch.health)  # (n_full, 3)
+                strace.append(ch.safemode)  # (n_full, 6)
             if rem:
                 st, ch = _condition_chunk(
                     cfg, scen, st, start + n_full * chunk, rem,
@@ -646,6 +696,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
                 parts.append(ch)
                 worst.append(ch.max_qp_residual)
                 htrace.append(ch.health[None])  # (1, 3)
+                strace.append(ch.safemode[None])  # (1, 6)
             cat = lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs)
             return st, pdu.CampusChunk(
                 campus_rack=cat([p.campus_rack for p in parts]),
@@ -654,6 +705,7 @@ def _scanned_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, rack_axis, bank)
                 max_qp_residual=functools.reduce(jnp.maximum, worst),
                 health=cat(htrace),
                 ess_online_frac=cat([p.ess_online_frac for p in parts]),
+                safemode=cat(strace),
             ), obs
 
         return run
@@ -751,6 +803,7 @@ def _condition_scenario_scanned_impl(
         ch.campus_rack[:t_total], ch.campus_grid[:t_total],
         ch.soc_mean[:n_ctrl], ch.max_qp_residual,
         bank, obs, ch.health, ch.ess_online_frac[:n_ctrl],
+        ch.safemode,
     )
 
 

@@ -454,6 +454,7 @@ def _chunk_geometry(cfg, region_or_scen, chunk_intervals, start, stop):
 def _assemble_region_result(
     cfg, reg, grid_spec, per, campus_rack, campus_grid, soc_mean,
     health_trace, ess_frac, max_qp, poi_rack, poi_grid, po, bank, mbank,
+    sm_trace=None,
 ) -> fleet.ConditioningResult:
     rep_rack = compliance.report_from_observers(
         grid_spec, po.ramp_rack, bank, po.spec_rack)
@@ -472,6 +473,7 @@ def _assemble_region_result(
         max_qp_residual=max_qp,
         health_trace=health_trace,
         ess_online_frac=ess_frac,
+        safemode_trace=sm_trace,
         poi_rack=poi_rack,
         poi_grid=poi_grid,
         report_poi=rep_poi,
@@ -555,6 +557,7 @@ def condition_region_sequential(
         max_qp=functools.reduce(
             jnp.maximum, [p.max_qp_residual for p in per]),
         poi_rack=poi_rack, poi_grid=poi_grid, po=po, bank=bank, mbank=mbank,
+        sm_trace=jnp.stack([p.safemode_trace for p in per]),
     )
 
 
@@ -598,7 +601,7 @@ def _region_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, bank, mbank):
                     po, bank, mbank, pr, pg, cfg.sample_dt)
                 return st2, obs2, po2, ch, pr, pg
 
-            parts, prs, pgs, worst, htrace = [], [], [], [], []
+            parts, prs, pgs, worst, htrace, strace = [], [], [], [], [], []
             if n_full:
                 def body(carry, c_idx):
                     st, obs, po = carry
@@ -618,6 +621,7 @@ def _region_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, bank, mbank):
                 pgs.append(pg.reshape(-1))
                 worst.append(jnp.max(ch.max_qp_residual))
                 htrace.append(ch.health)
+                strace.append(ch.safemode)
             if rem:
                 st, obs, po, ch, pr, pg = fold(
                     st, obs, po, start + n_full * chunk, rem)
@@ -626,6 +630,7 @@ def _region_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, bank, mbank):
                 pgs.append(pg)
                 worst.append(ch.max_qp_residual)
                 htrace.append(ch.health[None])
+                strace.append(ch.safemode[None])
             cat = lambda xs: xs[0] if len(xs) == 1 else jnp.concatenate(xs)
             camp = pdu.CampusChunk(
                 campus_rack=cat([p.campus_rack for p in parts]),
@@ -634,6 +639,7 @@ def _region_engine(cfg, qp_iters, chunk, k, n_full, rem, mesh, bank, mbank):
                 max_qp_residual=functools.reduce(jnp.maximum, worst),
                 health=cat(htrace),
                 ess_online_frac=cat([p.ess_online_frac for p in parts]),
+                safemode=cat(strace),
             )
             lift = lambda t: jax.tree_util.tree_map(lambda x: x[None], t)
             return lift(st), lift(camp), lift(obs), cat(prs), cat(pgs), po
@@ -729,7 +735,7 @@ def condition_region_sharded(
             cfg, grid_spec, take(st_f, c),
             campus_rack[c], campus_grid[c], soc_mean[c],
             camp.max_qp_residual[c], bank, take(obs_s, c),
-            camp.health[c], ess_frac[c],
+            camp.health[c], ess_frac[c], camp.safemode[c],
         )
         for c in range(C)
     ]
@@ -744,6 +750,7 @@ def condition_region_sharded(
         poi_rack=poi_rack[:t_total],
         poi_grid=poi_grid[:t_total],
         po=po, bank=bank, mbank=mbank,
+        sm_trace=camp.safemode,
     )
 
 

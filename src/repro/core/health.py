@@ -136,6 +136,36 @@ def init_state(
     )
 
 
+def reinit_where(
+    state: HealthState, mask: jax.Array, soc0: jax.Array | float
+) -> HealthState:
+    """Reset the masked racks' wear telemetry to a fresh history at ``soc0``.
+
+    The safe-mode sanitizer uses this when quarantining a corrupted rack:
+    its accumulators are unrecoverable (any of them may be the non-finite
+    leaf), so the honest telemetry is "history restarted here" — the
+    quarantine counter records that the restart happened.  An all-false
+    mask is bitwise identity.
+    """
+    mask = mask.astype(bool)
+    s0 = jnp.broadcast_to(jnp.asarray(soc0, jnp.float32), state.prev_soc.shape)
+    pick = lambda new, old: jnp.where(mask, new, old)
+    zf = jnp.zeros_like(state.direction)
+    return HealthState(
+        prev_soc=pick(s0, state.prev_soc),
+        last_ext=pick(s0, state.last_ext),
+        direction=pick(zf, state.direction),
+        half_cycles=pick(zf, state.half_cycles),
+        cycle_damage=pick(zf, state.cycle_damage),
+        max_dod=pick(zf, state.max_dod),
+        charge_soc=pick(zf, state.charge_soc),
+        discharge_soc=pick(zf, state.discharge_soc),
+        soc_sum=pick(zf, state.soc_sum),
+        soc_sq_sum=pick(zf, state.soc_sq_sum),
+        samples=pick(jnp.zeros_like(state.samples), state.samples),
+    )
+
+
 def _pow_depth(depth: jax.Array, kappa: float) -> jax.Array:
     """depth**kappa with a cheap repeated-multiply path for integer kappa
     (the scan body evaluates this every sample; ``jnp.power`` is the single

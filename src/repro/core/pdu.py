@@ -23,7 +23,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import compliance, controller as ctrl, ess, filters, health as hlt, sizing
+from repro.core import compliance, controller as ctrl, ess, filters, health as hlt, \
+    safemode as smode, sizing
 from repro.kernels import ops
 from repro.utils import pytree_dataclass, static_field
 
@@ -34,6 +35,7 @@ class PDUConfig:
     ess_params: ess.ESSParams
     controller: ctrl.ControllerConfig
     health: hlt.HealthParams = None  # aging model (used when track_health)
+    safemode_params: smode.SafeModeConfig = None  # watchdog knobs (when safemode)
     sample_dt: float = static_field(default=1e-3)  # trace sample period [s]
     software_enabled: bool = static_field(default=True)
     # Fold per-sample battery wear telemetry (core.health) into the
@@ -46,6 +48,12 @@ class PDUConfig:
     # passthrough.  Static so the fault-free path stays structurally (and
     # bitwise) identical to builds without this feature.
     degraded_mode: bool = static_field(default=False)
+    # Supervisory safe mode (core.safemode): per-rack NORMAL → PASSTHROUGH →
+    # QUARANTINE state machine driven in-jit by the ADMM divergence watchdog
+    # and the state-corruption sanitizer.  Static for the same reason as
+    # degraded_mode: with safemode=False the compiled program is
+    # structurally (and bitwise) identical to the unsupervised build.
+    safemode: bool = static_field(default=False)
 
 
 def per_unit_filter(s: sizing.SizingResult, rack: sizing.RackRating) -> filters.LCFilterParams:
@@ -70,6 +78,8 @@ def make_pdu(
     health_params: hlt.HealthParams | None = None,
     track_health: bool = False,
     degraded_mode: bool = False,
+    safemode: bool = False,
+    safemode_params: smode.SafeModeConfig | None = None,
 ) -> PDUConfig:
     """Size and assemble an EasyRider PDU for a rack + grid spec.
 
@@ -108,10 +118,14 @@ def make_pdu(
         ess_params=ess_params,
         controller=controller_cfg or ctrl.ControllerConfig.create(),
         health=health_params or hlt.HealthParams.create(),
+        safemode_params=(
+            (safemode_params or smode.SafeModeConfig.create()) if safemode else None
+        ),
         sample_dt=sample_dt,
         software_enabled=software_enabled,
         track_health=track_health,
         degraded_mode=degraded_mode,
+        safemode=safemode,
     )
 
 
@@ -130,6 +144,9 @@ class PDUState(NamedTuple):
     # finite sample seen per rack (seeds the sensor-dropout bridge).
     ess_online: jax.Array = None
     last_good: jax.Array = None
+    # Supervisory safe-mode state machine (always present so the carry
+    # structure is uniform; all-NORMAL zeros unless cfg.safemode).
+    safemode: smode.SafeModeState = None
 
 
 def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDUState:
@@ -160,6 +177,7 @@ def init_state(cfg: PDUConfig, rack_power0: jax.Array, soc0: float = 0.5) -> PDU
         # Distinct buffer from ess_state.g_filter: donated engines reject
         # the same array appearing twice in one argument list.
         last_good=jnp.copy(r0),
+        safemode=smode.init_state(r0.shape),
     )
 
 
@@ -180,6 +198,9 @@ class Telemetry(NamedTuple):
     grid_mean: jax.Array = None  # (T,) mean of the conditioned grid trace
     # Degraded-mode extra (None unless cfg.degraded_mode):
     ess_online: jax.Array = None  # (n_ctrl, ...) effective availability mask
+    # Safe-mode extra (None unless cfg.safemode): the post-watchdog
+    # supervisor mode per interval (0 NORMAL / 1 PASSTHROUGH / 2 QUARANTINE).
+    safemode_mode: jax.Array = None
 
 
 def bridge_sensors(
@@ -250,6 +271,20 @@ def condition(
     commands a live battery.  The effective mask actually applied and the
     per-sample mean of the bridged trace ride out in ``Telemetry``.
 
+    Safe mode (``cfg.safemode``): the supervisory state machine of
+    ``core.safemode`` rides the same scan.  Each interval starts with the
+    state-corruption sanitizer (non-finite carry leaves quarantine the
+    rack and reinitialize its slice to steady state), racks not in NORMAL
+    mode are excluded from the hardware plane through the same
+    ``ess_on`` weight degraded mode uses (LC passthrough), and after the
+    QP solve the divergence watchdog folds the raw per-rack primal
+    residual: racks over ``safemode_params.resid_threshold`` for
+    ``trip_intervals`` consecutive intervals trip to PASSTHROUGH — their
+    command is zeroed and their warm iterates reset — then probe their
+    (cold-started) solve every interval until ``readmit_intervals``
+    consecutive clean probes re-admit them.  ``Telemetry.safemode_mode``
+    carries the post-watchdog per-interval mode rows.
+
     ``ess_weight`` (optional, shaped like ``rack_power``) is the hardware
     plane's *per-sample* availability weight: trips land at their true
     sample and the converter winds down/soft-starts over the schedule's
@@ -262,6 +297,7 @@ def condition(
     (QP admission, command zeroing, telemetry).
     """
     degraded = cfg.degraded_mode
+    safemode = cfg.safemode
     if (ess_online is not None or ess_weight is not None) and not degraded:
         raise ValueError(
             "ess_online/ess_weight require a cfg with degraded_mode=True"
@@ -325,6 +361,18 @@ def condition(
     filt = state.filter_obj
     meas_w = min(float(cfg.controller.dt) / float(cfg.controller.meas_tau), 1.0)
 
+    if safemode:
+        sm_cfg = (
+            cfg.safemode_params
+            if cfg.safemode_params is not None
+            else smode.SafeModeConfig.create()
+        )
+        s_mid = jnp.asarray(cfg.controller.s_mid, jnp.float32)
+        # Steady-state map for quarantine reinit: x_ss(r) = (I-Ad)^-1 Bd
+        # [1, r] — hoisted out of the scan, shared by every rack.
+        eye = jnp.eye(filt.ad.shape[0], dtype=filt.ad.dtype)
+        ss_mat = jnp.linalg.solve(eye - filt.ad, filt.bd)  # (3, 2)
+
     ep = cfg.ess_params
     # Factor-once plan: P, A and the KKT Cholesky depend only on config, so
     # they are hoisted out of the interval scan (and shared by every rack).
@@ -340,6 +388,10 @@ def condition(
     hconsts = hlt.step_consts(cfg.health) if cfg.track_health else None
 
     def interval(carry, xs):
+        if safemode:
+            carry, sm = carry
+        else:
+            sm = None
         (
             x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, hstate,
             step_idx,
@@ -348,6 +400,88 @@ def condition(
             rack_chunk, on_row, hw_chunk = xs
         else:
             rack_chunk = xs
+
+        # --- safe mode: state-corruption sanitizer -----------------------
+        # Runs at the START of the interval, so non-finite state — whether
+        # injected between windows or produced by the previous interval —
+        # is quarantined and reinitialized before it can reach the
+        # hardware path or the solver.
+        if safemode:
+            r0 = rack_chunk[0]
+            r0 = jnp.where(jnp.isfinite(r0), r0, 0.5)
+            nonfin = lambda a: ~jnp.isfinite(a)
+            corrupt = (
+                nonfin(es.soc) | nonfin(es.g_filter)
+                | jnp.any(nonfin(x_f), axis=-1)
+                | nonfin(u_prev) | nonfin(cmd_applied) | nonfin(cmd_target)
+                | nonfin(soc_ema)
+                | jnp.any(nonfin(warm.x), axis=0)
+                | jnp.any(nonfin(warm.z), axis=0)
+                | jnp.any(nonfin(warm.y), axis=0)
+            )
+            for leaf in hstate:
+                if jnp.issubdtype(leaf.dtype, jnp.floating):
+                    corrupt = corrupt | nonfin(leaf)
+            fin = lambda a, v: jnp.where(jnp.isfinite(a), a, v)
+            x_ss = ss_mat[:, 0] + r0[..., None] * ss_mat[:, 1]
+            # Reinit is per-LEAF where the leaf itself went non-finite:
+            # hardware-continuous leaves (LC filter state, grid filter,
+            # applied command) keep their finite values so containment
+            # never steps the grid waveform, while the corrupted leaves
+            # land on the clean steady state.  Supervisor-internal leaves
+            # (warm iterates, wear accumulators, controller reference) do
+            # reset for the whole corrupted rack — a deterministic
+            # cold-started probe needs them clean, and they never touch
+            # the waveform directly.
+            es = ess.ESSState(
+                g_filter=fin(es.g_filter, r0), soc=fin(es.soc, s_mid)
+            )
+            x_f = fin(x_f, x_ss)
+            u_prev = jnp.where(corrupt, 0.0, u_prev)
+            cmd_applied = fin(cmd_applied, 0.0)
+            cmd_target = jnp.where(corrupt, 0.0, cmd_target)
+            soc_ema = fin(soc_ema, s_mid)
+            warm = ctrl.reset_warm_where(warm, corrupt)
+            hstate = hlt.reinit_where(hstate, corrupt, s_mid)
+            sm = smode.quarantine(sm, corrupt)
+            # Hardware admission reads the PRE-watchdog mode: a rack that
+            # only trips at this interval's solve still conditioned this
+            # interval (the trip gates its NEXT command), exactly like the
+            # degraded-mode interval-boundary semantics.  Containment is
+            # two-tier, matching what actually failed:
+            #
+            # * PASSTHROUGH (diverged QP) contains the SOFTWARE plane only
+            #   — command zeroed, warm reset, probing — while the
+            #   autonomous hardware ramp filter keeps smoothing (it needs
+            #   no solver).  Parking a healthy battery would expose raw
+            #   training bursts: ~5% of racks unconditioned already breaks
+            #   the campus ramp limit, i.e. the containment would inject
+            #   the very transient the conditioner exists to prevent.
+            # * QUARANTINE (corrupted state) falls all the way to LC
+            #   passthrough: the rack's SoC/filter tracking cannot be
+            #   trusted until the reinitialized state survives the
+            #   hysteresis window.  The fall is GRACEFUL — the hardware
+            #   plane stays live while the last applied command slews to
+            #   zero (one interval), then the converter winds down.
+            sm_gate = jnp.where(
+                (sm.mode == smode.QUARANTINE)
+                & (cmd_applied == 0.0) & (cmd_target == 0.0),
+                0.0,
+                1.0,
+            )
+            # Converter wind-down / soft-start: the applied ESS weight
+            # slews linearly across the interval from its carried value
+            # to the gate target.  At weight 0 the node sees RAW rack
+            # power (LC passthrough drops the smoothed setpoint g), so a
+            # hard 0/1 flip would step the campus waveform in one sample
+            # — exactly the transient the conditioner exists to prevent.
+            # Clean racks compute 1 + (1-1)*ramp == 1.0 exactly, keeping
+            # the supervised clean path bitwise identical.
+            ramp_w = (jnp.arange(1, k + 1, dtype=jnp.float32) / k).reshape(
+                (k,) + (1,) * sm_gate.ndim
+            )
+            sm_w = sm.hw_weight + (sm_gate - sm.hw_weight) * ramp_w
+            sm = sm._replace(hw_weight=sm_gate)
 
         # --- hardware path: interval-resident megakernel -----------------
         # One call simulates the whole interval: fused ESS + SoC + LC
@@ -364,6 +498,16 @@ def condition(
         g0, s0, xf0 = lift(es.g_filter), lift(es.soc), lift(x_f)
         if degraded:
             hw = jnp.broadcast_to(hw_chunk, (k,) + batch)
+            if safemode:
+                hw = hw * sm_w
+            mask_kw = dict(ess_on=hw if batched else hw[:, None])
+        elif safemode:
+            # Same two-plane machinery as degraded mode: non-NORMAL racks
+            # wind down to LC passthrough.  An all-ones weight is bitwise-
+            # identical to the unmasked kernel path (PR-6 contract), so a
+            # clean run with supervision on matches supervision off bit
+            # for bit.
+            hw = jnp.broadcast_to(sm_w, (k,) + batch)
             mask_kw = dict(ess_on=hw if batched else hw[:, None])
         else:
             mask_kw = {}
@@ -374,7 +518,7 @@ def condition(
         grid, _soc_path, (g_f, soc_f, x_new), h_leaves = ops.pdu_health_sim(
             rc, g0, s0, xf0, filt.ad, filt.bd, filt.c[0],
             slew=(lift(cmd_applied), lift(cmd_target)),
-            health=health_in, **mask_kw, **hw_kw,
+            health=health_in, guard=safemode, **mask_kw, **hw_kw,
         )
         # Campus means over the scan-resident buffers (see Telemetry).
         rack_mean_row = jnp.mean(rc, axis=1)
@@ -437,10 +581,38 @@ def condition(
             new_cmd = jnp.zeros_like(soc_meas)
             resid = jnp.zeros_like(soc_meas)
             warm2 = warm
+
+        # --- safe mode: ADMM divergence watchdog -------------------------
+        soc_row = es2.soc
+        if safemode:
+            # The watchdog folds the RAW residual (tripped racks keep
+            # probing; degraded-offline racks arrive pre-masked to zero so
+            # availability faults never read as solver faults), then the
+            # post-update mode gates the software plane: no non-NORMAL
+            # rack ever commands a live battery, and its warm iterates are
+            # reset so the next probe is a deterministic cold start.
+            # Per-interval command veto: an over-threshold (or non-finite)
+            # solve never gets its command applied, even before the trip
+            # streak completes — the rack HOLDS its last accepted command
+            # (still approximately right for one interval) instead of
+            # slewing toward a diverged iterate.  On clean runs the
+            # predicate is never true, so the supervised clean path stays
+            # bitwise identical.
+            bad_now = (resid > sm_cfg.resid_threshold) | ~jnp.isfinite(resid)
+            new_cmd = jnp.where(bad_now, cmd_target, new_cmd)
+            sm = smode.residual_update(sm_cfg, sm, resid)
+            sm_ok = sm.mode == smode.NORMAL
+            new_cmd = jnp.where(sm_ok, new_cmd, 0.0)
+            resid = jnp.where(sm_ok, resid, 0.0)
+            warm2 = ctrl.reset_warm_where(warm2, ~sm_ok)
+            # Telemetry guard: a SoC driven non-finite by this interval's
+            # sim stays in the carry (the sanitizer quarantines it next
+            # interval) but never reaches campus aggregates.
+            soc_row = jnp.where(jnp.isfinite(soc_row), soc_row, s_mid)
         new_u_prev = new_cmd / cfg.controller.i_max
 
         telem = (
-            es2.soc, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape), resid,
+            soc_row, new_cmd, jnp.broadcast_to(s_target, soc_meas.shape), resid,
             # In degraded mode this is the mean of the *bridged* trace (NaN
             # never reaches campus aggregates).
             rack_mean_row, grid_mean_row,
@@ -448,10 +620,14 @@ def condition(
         if degraded:
             # The mask actually applied this interval.
             telem = telem + (on_row,)
+        if safemode:
+            telem = telem + (sm.mode,)
         carry2 = (
             x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
             warm2, hstate2, step_idx + 1,
         )
+        if safemode:
+            carry2 = (carry2, sm)
         return carry2, (grid, telem)
 
     carry0 = (
@@ -459,11 +635,17 @@ def condition(
         state.cmd_applied, state.cmd_target, state.soc_ema, state.qp_warm,
         state.health, jnp.asarray(0.0, jnp.float32),
     )
-    (
-        (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, h_f, _),
-        (grid_chunks, telem),
-    ) = jax.lax.scan(
+    if safemode:
+        carry0 = (carry0, state.safemode)
+    final_carry, (grid_chunks, telem) = jax.lax.scan(
         interval, carry0, (chunks, on_rows, hw_chunks) if degraded else chunks
+    )
+    if safemode:
+        final_carry, sm_f = final_carry
+    else:
+        sm_f = state.safemode
+    (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, h_f, _) = (
+        final_carry
     )
     grid = grid_chunks.reshape((n_ctrl * k,) + rack_power.shape[1:])[:t]
     new_state = PDUState(
@@ -471,8 +653,15 @@ def condition(
         cmd_applied=cmd_applied, cmd_target=cmd_target, soc_ema=soc_ema,
         qp_warm=warm_f, health=h_f,
         ess_online=state.ess_online, last_good=last_good2,
+        safemode=sm_f,
     )
-    extra = dict(ess_online=telem[6]) if degraded else {}
+    extra = {}
+    ti = 6
+    if degraded:
+        extra["ess_online"] = telem[ti]
+        ti += 1
+    if safemode:
+        extra["safemode_mode"] = telem[ti]
     return grid, new_state, Telemetry(
         soc=telem[0], command=telem[1], target=telem[2], qp_residual=telem[3],
         rack_mean=telem[4].reshape((n_ctrl * k,))[:t],
@@ -494,6 +683,10 @@ class CampusChunk(NamedTuple):
     # campus passing spec with 30% of units dark is a different claim than
     # one passing at full strength, and this is where that shows.
     ess_online_frac: jax.Array = None
+    # Safe-mode supervisor snapshot at chunk end (zeros unless the cfg runs
+    # safemode): (6,) [frac_normal, n_passthrough, n_quarantined,
+    # entries_total, readmissions_total, worst_resid_streak].
+    safemode: jax.Array = None
 
 
 def condition_campus(
@@ -535,6 +728,10 @@ def condition_campus(
     # are bitwise-identical to reducing the (T, R) blocks here, but the
     # rendered chunk keeps a single consumer (no producer duplication) and
     # a campus-only engine never reads the (T, R) grid block at all.
+    if cfg.safemode:
+        smsnap = smode.chunk_snapshot(state2.safemode)
+    else:
+        smsnap = jnp.zeros((6,), jnp.float32)
     return state2, CampusChunk(
         campus_rack=telem.rack_mean,
         campus_grid=telem.grid_mean,
@@ -542,6 +739,7 @@ def condition_campus(
         max_qp_residual=jnp.max(telem.qp_residual),
         health=hsnap,
         ess_online_frac=on_frac,
+        safemode=smsnap,
     )
 
 

@@ -1,0 +1,220 @@
+"""Supervisory safe-mode control plane (ISSUE 9).
+
+The conditioner sits between training racks and grid protection equipment,
+so *its own* failures are grid-safety events: a diverged QP or a
+NaN-corrupted SoC leaf applies a garbage battery command at exactly the
+moment transients are worst.  This module is the per-rack supervisor that
+detects, contains, and recovers from those internal failures, entirely
+in-jit (it rides the conditioning interval scan):
+
+    NORMAL ──(ADMM residual over threshold for ``trip_intervals``)──▶ PASSTHROUGH
+    NORMAL / PASSTHROUGH ──(non-finite state leaf)──▶ QUARANTINE
+    PASSTHROUGH / QUARANTINE ──(``readmit_intervals`` clean probes)──▶ NORMAL
+
+Two watchdogs drive the transitions:
+
+* **ADMM divergence watchdog** — the per-rack QP primal residual is
+  compared against ``resid_threshold`` every control interval; a rack over
+  threshold for ``trip_intervals`` *consecutive* intervals trips to
+  PASSTHROUGH: its corrective command is zeroed and its warm-started ADMM
+  iterates are reset through the same software-admission plane degraded
+  mode uses (``ess_online``).  The *autonomous* hardware ramp filter
+  stays engaged — it needs no solver, and parking a healthy battery
+  would expose raw training bursts (5% of racks unconditioned already
+  breaks the campus ramp limit), i.e. hard LC passthrough on a software
+  fault injects the very transient the conditioner exists to prevent.
+  A non-finite residual counts as over threshold (NaN compares false
+  against any threshold, which is exactly how a diverged solver would
+  otherwise hide from the watchdog).
+* **State-corruption sanitizer** — a non-finite leaf anywhere in a rack's
+  carried state (SoC, LC filter state, warm iterates, command slew pair,
+  health carries) quarantines the rack: its state slice is reinitialized
+  to a clean steady state and the event is counted.  Detection runs at the
+  *start* of each interval, so corruption injected between windows (or
+  produced by the previous interval) never reaches the hardware path.
+  QUARANTINE is the only mode that drops the hardware plane to LC
+  passthrough (via the degraded-mode ``ess_on`` weight, with converter
+  wind-down/soft-start so the transition never steps the waveform):
+  a rack whose SoC/filter tracking went non-finite cannot be trusted to
+  run its converter until the reinitialized state survives the
+  hysteresis window.
+
+Re-admission is hysteretic: a tripped rack keeps *probing* — its QP still
+solves every interval (cold-started; the warm reset makes the probe
+deterministic) while its command stays zeroed — and only after
+``readmit_intervals`` consecutive clean probes does it return to NORMAL.
+
+Everything is per-rack and vectorized; ``SafeModeState`` rides in
+``PDUState`` so chunked/resumed streams supervise identically to one-shot
+runs.  With ``PDUConfig.safemode=False`` none of this executes and the
+engines are bitwise identical to the unsupervised build.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+
+# Mode encoding (int32 per rack).  Order matters: higher = more contained.
+NORMAL = 0
+PASSTHROUGH = 1  # divergence trip: LC passthrough, command zeroed, probing
+QUARANTINE = 2  # state corruption: slice reinitialized, LC passthrough
+
+
+@pytree_dataclass
+class SafeModeConfig:
+    """Watchdog knobs.  ``resid_threshold`` is in the units of the QP
+    primal residual (the warm-started plan path converges to ~5e-3 on the
+    acceptance campus; the default trips at 10x that).  The interval
+    counts are static so the state machine compiles into the scan."""
+
+    resid_threshold: jax.Array
+    trip_intervals: int = static_field(default=3)
+    readmit_intervals: int = static_field(default=8)
+
+    @staticmethod
+    def create(
+        resid_threshold: float = 0.05,
+        trip_intervals: int = 3,
+        readmit_intervals: int = 8,
+    ) -> "SafeModeConfig":
+        if trip_intervals < 1:
+            raise ValueError(f"trip_intervals must be >= 1, got {trip_intervals}")
+        if readmit_intervals < 1:
+            raise ValueError(
+                f"readmit_intervals must be >= 1, got {readmit_intervals}")
+        return SafeModeConfig(
+            resid_threshold=jnp.asarray(resid_threshold, jnp.float32),
+            trip_intervals=int(trip_intervals),
+            readmit_intervals=int(readmit_intervals),
+        )
+
+
+class SafeModeState(NamedTuple):
+    """Per-rack supervisor state carried across intervals/chunks/resumes.
+
+    Counter/streak leaves are int32 with the rack batch shape.
+    ``worst_streak`` is telemetry (the longest over-threshold residual run
+    ever observed); the three counters are monotone event totals an
+    operator can diff across windows to detect entries/exits.
+    ``hw_weight`` is the float32 ESS availability weight the hardware
+    plane actually applied at the end of the last interval — the engine
+    slews it linearly across each interval toward the supervisor's gate
+    (converter wind-down on containment, soft-start on re-admission), so
+    a rack entering or leaving LC passthrough never steps the node
+    waveform from the smoothed setpoint to raw rack power in one sample.
+    """
+
+    mode: jax.Array  # NORMAL / PASSTHROUGH / QUARANTINE
+    resid_streak: jax.Array  # consecutive over-threshold intervals
+    clean_streak: jax.Array  # consecutive clean probes while tripped
+    worst_streak: jax.Array  # max resid_streak ever seen (telemetry)
+    passthrough_entries: jax.Array  # divergence trips (total)
+    quarantine_entries: jax.Array  # corruption events (total)
+    readmissions: jax.Array  # re-admissions to NORMAL (total)
+    hw_weight: jax.Array  # f32 applied ESS weight (wind-down / soft-start)
+
+
+def init_state(batch_shape: tuple[int, ...] = ()) -> SafeModeState:
+    # Distinct buffers per leaf: donated engines reject the same array
+    # appearing twice in one argument list.
+    return SafeModeState(
+        *(jnp.zeros(batch_shape, jnp.int32) for _ in range(7)),
+        jnp.ones(batch_shape, jnp.float32),
+    )
+
+
+def gate(st: SafeModeState) -> jax.Array:
+    """1.0 where the rack may command its battery (NORMAL), else 0.0 —
+    the software-admission multiplier (same semantics as degraded-mode
+    ``ess_online``).  The hardware plane gates separately: only
+    QUARANTINE winds the converter down to LC passthrough; PASSTHROUGH
+    keeps the autonomous ramp filter smoothing under a zeroed command."""
+    return (st.mode == NORMAL).astype(jnp.float32)
+
+
+def quarantine(st: SafeModeState, corrupt: jax.Array) -> SafeModeState:
+    """Mode update for racks whose carried state went non-finite.
+
+    Every corruption event is counted (a rack corrupted again while
+    already quarantined re-counts: each event is a distinct reinit), the
+    rack's streaks reset, and the mode latches to QUARANTINE.  The caller
+    is responsible for actually reinitializing the state slice.
+    """
+    corrupt = corrupt.astype(bool)
+    zero = jnp.zeros_like(st.resid_streak)
+    return st._replace(
+        mode=jnp.where(corrupt, QUARANTINE, st.mode).astype(jnp.int32),
+        resid_streak=jnp.where(corrupt, zero, st.resid_streak),
+        clean_streak=jnp.where(corrupt, zero, st.clean_streak),
+        quarantine_entries=st.quarantine_entries + corrupt.astype(jnp.int32),
+    )
+
+
+def residual_update(
+    cfg: SafeModeConfig, st: SafeModeState, resid: jax.Array
+) -> SafeModeState:
+    """Watchdog fold after the interval's QP solve.
+
+    ``resid`` is the raw per-rack primal residual — *unmasked* by safe
+    mode, so tripped racks keep probing (degraded-mode ESS-offline racks
+    arrive pre-masked to zero, which is correct: an offline rack is the
+    availability plane's problem, not a solver failure).  Non-finite
+    residuals count as over threshold.  Trips happen strictly from
+    NORMAL; re-admission requires ``readmit_intervals`` consecutive clean
+    probes from either contained mode.
+    """
+    bad = (resid > cfg.resid_threshold) | ~jnp.isfinite(resid)
+    streak = jnp.where(bad, st.resid_streak + 1, 0)
+    worst = jnp.maximum(st.worst_streak, streak)
+    trip = (st.mode == NORMAL) & (streak >= cfg.trip_intervals)
+    mode = jnp.where(trip, PASSTHROUGH, st.mode)
+    tripped = mode != NORMAL
+    clean = jnp.where(tripped & ~bad, st.clean_streak + 1, 0)
+    readmit = tripped & (clean >= cfg.readmit_intervals)
+    mode = jnp.where(readmit, NORMAL, mode)
+    return st._replace(
+        mode=mode.astype(jnp.int32),
+        resid_streak=streak.astype(jnp.int32),
+        clean_streak=jnp.where(readmit, 0, clean).astype(jnp.int32),
+        worst_streak=worst.astype(jnp.int32),
+        passthrough_entries=st.passthrough_entries + trip.astype(jnp.int32),
+        readmissions=st.readmissions + readmit.astype(jnp.int32),
+    )
+
+
+def chunk_snapshot(st: SafeModeState) -> jax.Array:
+    """(6,) float32 campus aggregate at a chunk boundary:
+    [frac_normal, n_passthrough, n_quarantined, entries_total,
+    readmissions_total, worst_resid_streak] — the supervisor telemetry a
+    campus operator would chart next to ``ess_online_frac``."""
+    f = jnp.float32
+    return jnp.stack([
+        jnp.mean((st.mode == NORMAL).astype(f)),
+        jnp.sum((st.mode == PASSTHROUGH).astype(f)),
+        jnp.sum((st.mode == QUARANTINE).astype(f)),
+        jnp.sum(st.passthrough_entries + st.quarantine_entries).astype(f),
+        jnp.sum(st.readmissions).astype(f),
+        jnp.max(st.worst_streak).astype(f),
+    ])
+
+
+def summary(st: SafeModeState) -> dict:
+    """JSON-safe host-side summary of one fleet's supervisor state."""
+    import numpy as np
+
+    mode = np.asarray(st.mode)
+    return dict(
+        n_normal=int(np.sum(mode == NORMAL)),
+        n_passthrough=int(np.sum(mode == PASSTHROUGH)),
+        n_quarantined=int(np.sum(mode == QUARANTINE)),
+        passthrough_racks=[int(i) for i in np.flatnonzero(mode == PASSTHROUGH)],
+        quarantined_racks=[int(i) for i in np.flatnonzero(mode == QUARANTINE)],
+        passthrough_entries=int(np.sum(np.asarray(st.passthrough_entries))),
+        quarantine_entries=int(np.sum(np.asarray(st.quarantine_entries))),
+        readmissions=int(np.sum(np.asarray(st.readmissions))),
+        worst_resid_streak=int(np.max(np.asarray(st.worst_streak))),
+    )

@@ -70,23 +70,42 @@ def pdu_sim(rack_power, g0, soc0, x0, ad, bd, c_row, corrective, *, force=None, 
 
 
 def pdu_health_sim(
-    rack_power, g0, soc0, x0, ad, bd, c_row, *, health=None, force=None, **kw
+    rack_power, g0, soc0, x0, ad, bd, c_row, *,
+    health=None, guard=False, force=None, **kw
 ):
     """Interval-resident conditioning megakernel: ``pdu_sim`` + in-kernel
     command slew (``slew=(applied, target)``) + fused battery-health fold
     (``health=(step_consts, state_leaves)``).  One launch per controller
     interval; see ``ref.pdu_health_sim`` for the exact semantics and the
-    bitwise contract."""
+    bitwise contract.
+
+    ``guard=True`` (the safe-mode output guard) replaces any non-finite
+    sample of the conditioned grid trace with the corresponding raw rack
+    sample — the grid-facing waveform degrades to passthrough instead of
+    exporting NaN toward protection equipment.  Applied in the dispatch
+    wrapper so both backends share it (on TPU it fuses as an elementwise
+    epilogue); identity on finite outputs, so the guarded clean path is
+    bitwise-identical to ``guard=False``.  The carried machine state is
+    deliberately NOT guarded: the supervisor's sanitizer quarantines the
+    rack from the poisoned carry on the next interval, which is the
+    observable event an operator needs counted.
+    """
     use, interp = _mode(force)
     if use:
         hc, hs = health if health is not None else (None, None)
-        return _ph.pdu_health_sim(
+        out = _ph.pdu_health_sim(
             rack_power, g0, soc0, x0, ad, bd, c_row,
             health_consts=hc, health_state=hs, interpret=interp, **kw,
         )
-    return _ref.pdu_health_sim(
-        rack_power, g0, soc0, x0, ad, bd, c_row, health=health, **kw
-    )
+    else:
+        out = _ref.pdu_health_sim(
+            rack_power, g0, soc0, x0, ad, bd, c_row, health=health, **kw
+        )
+    if guard:
+        grid, soc_path, machine, h_leaves = out
+        grid = jnp.where(jnp.isfinite(grid), grid, rack_power)
+        out = (grid, soc_path, machine, h_leaves)
+    return out
 
 
 def admm_iterate(

@@ -33,15 +33,42 @@ non-standard ``Infinity`` literal that breaks downstream parsers.
 """
 from __future__ import annotations
 
+import glob as _glob
+import hashlib
 import json
 import os
+import zipfile
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, fleet, health as hlt, pdu
+from repro.core import compliance, fleet, health as hlt, pdu, safemode as smode
+
+_CKPT_MAGIC = "easyrider-conditioner-ckpt-v2"
+
+
+def _fingerprint(cfg, scenario, grid_spec) -> str:
+    """sha256 over the full service configuration: config, scenario, and
+    grid spec pytrees — treedefs (which carry every static field) plus
+    each leaf's shape, dtype, and bytes.  Stored in checkpoints and
+    validated on restore, so a checkpoint can never be silently loaded
+    into a service built over different physics, fleet geometry, or
+    compliance limits.  Deliberately excludes ``chunk_intervals`` and the
+    carried state: resume is chunk-size invariant, and the state is the
+    payload being restored, not part of the identity.
+    """
+    h = hashlib.sha256()
+    for obj in (cfg, scenario, grid_spec):
+        leaves, treedef = jax.tree_util.tree_flatten(obj)
+        h.update(str(treedef).encode())
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            h.update(str(arr.shape).encode())
+            h.update(str(arr.dtype).encode())
+            h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 class AuditLog:
@@ -49,21 +76,73 @@ class AuditLog:
 
     Every record is one line of strict JSON (``allow_nan=False``), flushed
     on write — the file is valid and tail-able at any crash point, which is
-    the whole point of an audit log.
+    the whole point of an audit log.  Each record carries a ``seq`` number,
+    monotone within its log file (a restarted service continues from the
+    line count of the existing file), so a parser can assert no record was
+    lost or reordered across a crash.
+
+    ``fsync=True`` makes every append durable (``flush`` + ``os.fsync``)
+    so the log survives power loss, not just process death.  ``max_bytes``
+    turns on size-based rotation: when the file would exceed the limit it
+    is shifted to ``<path>.1`` (older generations move to ``.2``, ``.3``,
+    ... up to ``backups``; the oldest is dropped) and the main file starts
+    fresh — unattended multi-week runs never grow one unbounded JSONL.
     """
 
-    def __init__(self, path: str | os.PathLike | None = None):
+    def __init__(
+        self,
+        path: str | os.PathLike | None = None,
+        *,
+        fsync: bool = False,
+        max_bytes: int | None = None,
+        backups: int = 3,
+    ):
         self.path = os.fspath(path) if path is not None else None
+        self.fsync = bool(fsync)
+        self.max_bytes = None if max_bytes is None else int(max_bytes)
+        self.backups = int(backups)
         self._events: list[dict] = []
+        self._seq = 0
+        if self.path is not None and os.path.exists(self.path):
+            # Continue the per-file seq after a restart over the same log.
+            with open(self.path) as f:
+                self._seq = sum(1 for _ in f)
 
     def append(self, event: str, **fields) -> dict:
-        rec = dict(event=event, **fields)
+        if (
+            self.path is not None
+            and self.max_bytes is not None
+            and os.path.exists(self.path)
+        ):
+            probe = json.dumps(
+                dict(event=event, seq=self._seq, **fields),
+                sort_keys=True, allow_nan=False,
+            )
+            if os.path.getsize(self.path) + len(probe) + 1 > self.max_bytes:
+                self._rotate()  # resets seq; assign it only after this
+        rec = dict(event=event, seq=self._seq, **fields)
         line = json.dumps(rec, sort_keys=True, allow_nan=False)
         self._events.append(rec)
+        self._seq += 1
         if self.path is not None:
             with open(self.path, "a") as f:
                 f.write(line + "\n")
+                if self.fsync:
+                    f.flush()
+                    os.fsync(f.fileno())
         return rec
+
+    def _rotate(self) -> None:
+        if self.backups <= 0:
+            os.remove(self.path)
+        else:
+            for i in range(self.backups - 1, 0, -1):
+                src = f"{self.path}.{i}"
+                if os.path.exists(src):
+                    os.replace(src, f"{self.path}.{i + 1}")
+            os.replace(self.path, f"{self.path}.1")
+        # seq restarts with the fresh file (monotone is per file).
+        self._seq = 0
 
     def tail(self, n: int = 10) -> list[dict]:
         return self._events[-n:]
@@ -95,6 +174,11 @@ class ConditionerService:
         soc0: float = 0.5,
         mesh=None,
         audit_path: str | os.PathLike | None = None,
+        audit_fsync: bool = False,
+        audit_max_bytes: int | None = None,
+        checkpoint_dir: str | os.PathLike | None = None,
+        checkpoint_every: int | None = None,
+        keep_checkpoints: int = 3,
     ):
         from repro.core.fleet import _check_scenario_faults, _check_scenario_rate
         from repro.power import scenario as SC
@@ -107,10 +191,24 @@ class ConditionerService:
         self.mesh = mesh
         self._k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
         self.sample_pos = 0
-        self.audit = AuditLog(audit_path)
+        self.audit = AuditLog(
+            audit_path, fsync=audit_fsync, max_bytes=audit_max_bytes
+        )
+        self.checkpoint_dir = (
+            os.fspath(checkpoint_dir) if checkpoint_dir is not None else None
+        )
+        self.checkpoint_every = (
+            None if checkpoint_every is None else int(checkpoint_every)
+        )
+        if self.checkpoint_every is not None and self.checkpoint_dir is None:
+            raise ValueError("checkpoint_every requires checkpoint_dir")
+        self.keep_checkpoints = int(keep_checkpoints)
+        self._windows_since_ckpt = 0
         self._degraded_now = False
         self._last_result: fleet.ConditioningResult | None = None
         self._is_region = hasattr(scenario, "campuses")
+        self.fingerprint = _fingerprint(cfg, scenario, grid_spec)
+        self._sm_prev = (0, 0, 0)  # (passthrough_entries, quarantine_entries, readmissions)
 
         if self._is_region:
             campuses = scenario.campuses
@@ -204,7 +302,77 @@ class ConditionerService:
         self.sample_pos = stop
         self._last_result = res
         self._log_window(start, stop, res)
+        if getattr(self.cfg, "safemode", False):
+            self._log_safemode(start)
+        if self.checkpoint_every is not None:
+            self._windows_since_ckpt += 1
+            if self._windows_since_ckpt >= self.checkpoint_every:
+                self._auto_checkpoint()
         return res
+
+    # ------------------------------------------------------------- safe mode
+
+    def _sm_totals(self) -> tuple[int, int, int]:
+        """Fleet-wide (passthrough_entries, quarantine_entries, readmissions)
+        summed over racks (and campuses for a region)."""
+        states = self.state if self._is_region else (self.state,)
+        tot = [0, 0, 0]
+        for st in states:
+            sm = st.safemode
+            if sm is None:
+                continue
+            tot[0] += int(np.asarray(sm.passthrough_entries).sum())
+            tot[1] += int(np.asarray(sm.quarantine_entries).sum())
+            tot[2] += int(np.asarray(sm.readmissions).sum())
+        return tuple(tot)
+
+    def _sm_racks(self, mode: int) -> list[int]:
+        """Global rack indices currently in the given safe-mode state."""
+        states = self.state if self._is_region else (self.state,)
+        out = []
+        off = 0
+        for st in states:
+            m = np.asarray(st.safemode.mode)
+            out.extend(int(i) + off for i in np.flatnonzero(m == mode))
+            off += m.shape[0]
+        return out
+
+    def _log_safemode(self, start: int) -> None:
+        """Audit counter deltas from the supervisory state machine: each
+        window that tripped new racks into passthrough/quarantine gets a
+        ``safemode_enter`` event (with the racks currently contained), and
+        each window with hysteretic re-admissions a ``safemode_exit``."""
+        pt, qr, ra = self._sm_totals()
+        d_pt, d_qr = pt - self._sm_prev[0], qr - self._sm_prev[1]
+        d_ra = ra - self._sm_prev[2]
+        self._sm_prev = (pt, qr, ra)
+        if d_pt or d_qr:
+            self.audit.append(
+                "safemode_enter", sample=start,
+                new_passthrough=d_pt, new_quarantine=d_qr,
+                passthrough_racks=self._sm_racks(smode.PASSTHROUGH),
+                quarantined_racks=self._sm_racks(smode.QUARANTINE),
+            )
+        if d_ra:
+            self.audit.append(
+                "safemode_exit", sample=start, readmissions=d_ra,
+                still_contained=self._sm_racks(smode.PASSTHROUGH)
+                + self._sm_racks(smode.QUARANTINE),
+            )
+
+    def _auto_checkpoint(self) -> None:
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        path = os.path.join(
+            self.checkpoint_dir, f"ckpt_{self.sample_pos:012d}.npz"
+        )
+        self.checkpoint(path)
+        self._windows_since_ckpt = 0
+        # Prune oldest auto-checkpoints beyond the retention window.
+        kept = sorted(
+            _glob.glob(os.path.join(self.checkpoint_dir, "ckpt_*.npz"))
+        )
+        for old in kept[: max(0, len(kept) - self.keep_checkpoints)]:
+            os.remove(old)
 
     def _log_window(self, start: int, stop: int, res: fleet.ConditioningResult):
         from repro.power import faults as FLT
@@ -320,7 +488,15 @@ class ConditionerService:
     # ------------------------------------------------------ checkpoint/restore
 
     def checkpoint(self, path: str | os.PathLike) -> str:
-        """Write the carried state + stream position to ``path`` (.npz).
+        """Write the carried state + stream position to ``path`` (.npz),
+        atomically.
+
+        The archive is written to a same-directory temp file, flushed and
+        fsync'd, then ``os.replace``'d over the target (the directory is
+        fsync'd too) — a crash at any point leaves either the previous
+        checkpoint intact or the complete new one, never a torn file at
+        the target path.  The archive carries the service's config/scenario
+        fingerprint, validated on restore.
 
         Only valid at an interval boundary, which every ``advance`` stop
         is — the state *is* the interval-boundary carry, so no mid-interval
@@ -328,14 +504,30 @@ class ConditionerService:
         """
         path = os.fspath(path)
         if not path.endswith(".npz"):
-            path += ".npz"  # np.savez appends it; return the real filename
+            path += ".npz"  # keep the real filename predictable
         leaves = jax.tree_util.tree_leaves(self.state)
-        np.savez(
-            path,
+        payload = dict(
+            magic=np.asarray(_CKPT_MAGIC),
+            fingerprint=np.asarray(self.fingerprint),
             sample_pos=np.int64(self.sample_pos),
             n_leaves=np.int64(len(leaves)),
             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)},
         )
+        tmp = f"{path}.tmp-{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                np.savez(f, **payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.remove(tmp)
+        dfd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
         self.audit.append(
             "checkpoint_saved", sample=self.sample_pos, path=path,
         )
@@ -345,13 +537,25 @@ class ConditionerService:
         """Load a checkpoint written by ``checkpoint`` into this service.
 
         The service must be constructed over the same config and scenario
-        geometry (the checkpoint stores leaves, the treedef comes from the
-        live state); leaf count and shapes are validated.  Continuing with
-        ``advance`` reproduces the uninterrupted run bitwise — the
-        crash-resume regression test holds this to array equality.
+        (the checkpoint stores leaves, the treedef comes from the live
+        state); the stored config/scenario fingerprint plus every leaf's
+        count, shape, AND dtype are validated, so a checkpoint from a
+        different fleet, physics config, or float width is rejected as a
+        config mismatch instead of silently corrupting the resumed stream.
+        Continuing with ``advance`` reproduces the uninterrupted run
+        bitwise — the crash-resume regression test holds this to array
+        equality.
         """
         path = os.fspath(path)
         with np.load(path) as z:
+            if "fingerprint" in z.files:
+                fp = str(z["fingerprint"])
+                if fp != self.fingerprint:
+                    raise ValueError(
+                        f"checkpoint fingerprint {fp[:12]}... does not match "
+                        f"this service's {self.fingerprint[:12]}... — it was "
+                        "written under a different config/scenario/grid spec"
+                    )
             n = int(z["n_leaves"])
             template = jax.tree_util.tree_leaves(self.state)
             if n != len(template):
@@ -362,17 +566,71 @@ class ConditionerService:
             leaves = []
             for i, t in enumerate(template):
                 arr = z[f"leaf_{i}"]
-                if arr.shape != np.asarray(t).shape:
+                t_arr = np.asarray(t)
+                if arr.shape != t_arr.shape:
                     raise ValueError(
                         f"checkpoint leaf {i} shape {arr.shape} != expected "
-                        f"{np.asarray(t).shape} — config/scenario mismatch"
+                        f"{t_arr.shape} — config/scenario mismatch"
+                    )
+                if arr.dtype != t_arr.dtype:
+                    raise ValueError(
+                        f"checkpoint leaf {i} dtype {arr.dtype} != expected "
+                        f"{t_arr.dtype} — config/scenario mismatch"
                     )
                 leaves.append(jnp.asarray(arr))
             treedef = jax.tree_util.tree_structure(self.state)
             self.state = jax.tree_util.tree_unflatten(treedef, leaves)
             self.sample_pos = int(z["sample_pos"])
         self._last_result = None
+        self._sm_prev = (
+            self._sm_totals()
+            if getattr(self.cfg, "safemode", False)
+            else (0, 0, 0)
+        )
         self.audit.append("restored", sample=self.sample_pos, path=path)
+
+    def recover(self, ckpt_dir: str | os.PathLike) -> str | None:
+        """Restore from the newest valid checkpoint under ``ckpt_dir``.
+
+        Candidates (``*.npz``, non-recursive) are probed newest-first by
+        their stored ``sample_pos``; torn or unreadable files — a truncated
+        archive from a crash mid-write under a non-atomic writer, a
+        zero-byte file, a foreign npz — are skipped with a
+        ``recover_skipped`` audit event rather than aborting recovery.
+        Returns the path restored from, or ``None`` (with a
+        ``recover_failed`` event) when no candidate was valid; the service
+        is left at its pre-call state in that case.
+        """
+        ckpt_dir = os.fspath(ckpt_dir)
+        candidates = []
+        for p in _glob.glob(os.path.join(ckpt_dir, "*.npz")):
+            try:
+                with np.load(p) as z:
+                    if "magic" in z.files and str(z["magic"]) != _CKPT_MAGIC:
+                        raise ValueError("not a conditioner checkpoint")
+                    pos = int(z["sample_pos"])
+            except (
+                OSError, ValueError, KeyError, zipfile.BadZipFile, EOFError,
+            ) as e:
+                self.audit.append(
+                    "recover_skipped", path=p, error=f"{type(e).__name__}: {e}"
+                )
+                continue
+            candidates.append((pos, p))
+        for _, p in sorted(candidates, reverse=True):
+            try:
+                self.restore(p)
+            except (
+                OSError, ValueError, KeyError, zipfile.BadZipFile, EOFError,
+            ) as e:
+                self.audit.append(
+                    "recover_skipped", path=p, error=f"{type(e).__name__}: {e}"
+                )
+                continue
+            self.audit.append("recovered", sample=self.sample_pos, path=p)
+            return p
+        self.audit.append("recover_failed", dir=ckpt_dir)
+        return None
 
     # --------------------------------------------------------------- status
 
@@ -461,6 +719,21 @@ class ConditionerService:
                 ]
             else:
                 out["health"] = hlt.fleet_summary(res.health, json_safe=True)
+        if getattr(self.cfg, "safemode", False):
+            states = self.state if self._is_region else (self.state,)
+            per = [smode.summary(st.safemode) for st in states]
+            sm = dict(
+                n_normal=sum(p["n_normal"] for p in per),
+                n_passthrough=sum(p["n_passthrough"] for p in per),
+                n_quarantined=sum(p["n_quarantined"] for p in per),
+                passthrough_racks=self._sm_racks(smode.PASSTHROUGH),
+                quarantined_racks=self._sm_racks(smode.QUARANTINE),
+                passthrough_entries=sum(p["passthrough_entries"] for p in per),
+                quarantine_entries=sum(p["quarantine_entries"] for p in per),
+                readmissions=sum(p["readmissions"] for p in per),
+                worst_resid_streak=max(p["worst_resid_streak"] for p in per),
+            )
+            out["safemode"] = sm
         # Strict-JSON guarantee: this must always survive allow_nan=False.
         json.dumps(out, allow_nan=False)
         return out

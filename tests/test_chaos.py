@@ -1,0 +1,343 @@
+"""Chaos harness (ISSUE 9): crash/fault injection against the supervised
+service.
+
+Two tiers:
+
+* **fast deterministic subset** (unmarked — runs in tier-1): atomic
+  checkpoint semantics, torn-file recovery, kill/resume bitwise equality,
+  restore validation (dtype + fingerprint), audit durability/rotation,
+  and one fixed fault drill;
+* **randomized sweep** (``@pytest.mark.chaos`` — opt-in via
+  ``pytest -m chaos``, deselected by default through ``addopts``):
+  seeded random kill-points, fault soups (ADMM divergence + NaN
+  corruption + scheduled ESS trips), and corruption injections, replayed
+  deterministically per seed.
+
+Invariants held everywhere: every carried state leaf is finite; SoC stays
+inside the safe window; contained racks never command a live battery;
+recovery reproduces the uninterrupted run bitwise; the audit log stays
+parseable with monotone ``seq`` after any simulated crash.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance, pdu, safemode as smode
+from repro.power import faults as FLT, scenario as SC
+from repro.serve import AuditLog, ConditionerService
+
+_HZ = 100.0
+_SPEC = compliance.GridSpec.create()
+
+
+def _scenario(duration_s=60.0, n_racks=5, faulty=False, seed=4):
+    s = SC.mixed_campus(
+        n_racks, ("llama3_2_1b", "qwen1_5_4b"),
+        duration_s=duration_s, sample_hz=_HZ, seed=seed,
+    )
+    if faulty:
+        proc = FLT.FaultProcess.create(
+            ess_mtbf_s=25.0, ess_mttr_s=10.0,
+            sensor_mtbf_s=30.0, sensor_mttr_s=5.0,
+        )
+        s = SC.attach_faults(s, proc, seed=17)
+    return s
+
+
+def _service(s, **kw):
+    cfg = pdu.make_pdu(
+        sample_dt=1.0 / _HZ, degraded_mode=True, safemode=True,
+        safemode_params=smode.SafeModeConfig.create(
+            trip_intervals=2, readmit_intervals=3
+        ),
+    )
+    return ConditionerService(cfg, s, _SPEC, chunk_intervals=4, **kw)
+
+
+def _poison_warm(st, racks, value=1e12):
+    x = st.qp_warm.x.at[:, jnp.asarray(racks)].set(value)
+    return st._replace(qp_warm=st.qp_warm._replace(x=x))
+
+
+def _corrupt_soc(st, racks):
+    soc = st.ess_state.soc.at[jnp.asarray(racks)].set(jnp.nan)
+    return st._replace(ess_state=st.ess_state._replace(soc=soc))
+
+
+def _assert_invariants(svc):
+    import jax
+
+    cfg = svc.cfg
+    lo = float(cfg.ess_params.soc_safe_min)
+    hi = float(cfg.ess_params.soc_safe_max)
+    states = svc.state if svc._is_region else (svc.state,)
+    for st in states:
+        for leaf in jax.tree_util.tree_leaves(st):
+            assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float64)))
+        soc = np.asarray(st.ess_state.soc)
+        assert np.all(soc >= lo - 1e-6) and np.all(soc <= hi + 1e-6)
+        # Contained racks hold zero command toward their battery.
+        gate = np.asarray(smode.gate(st.safemode))
+        assert np.all(np.asarray(st.cmd_target)[gate == 0.0] == 0.0)
+        assert np.all(np.asarray(st.u_prev)[gate == 0.0] == 0.0)
+
+
+def _drain_by_window(svc):
+    """Advance to exhaustion; {start_sample: campus_grid} per window."""
+    out = {}
+    while not svc.exhausted:
+        start = svc.sample_pos
+        res = svc.advance()
+        out[start] = np.asarray(res.campus_grid)
+    return out
+
+
+# ------------------------------------------------- fast deterministic tier
+
+
+def test_checkpoint_leaves_no_temp_residue(tmp_path):
+    svc = _service(_scenario(duration_s=20.0))
+    svc.advance()
+    p = svc.checkpoint(tmp_path / "a.npz")
+    assert os.path.exists(p)
+    assert [f for f in os.listdir(tmp_path)] == ["a.npz"]
+
+
+def test_interrupted_checkpoint_preserves_previous(tmp_path, monkeypatch):
+    """A crash mid-checkpoint (simulated at the rename) must leave the
+    previous checkpoint intact and loadable — the atomic-write contract."""
+    s = _scenario(duration_s=60.0)
+    svc = _service(s)
+    svc.advance()
+    p = svc.checkpoint(tmp_path / "a.npz")
+    pos0 = svc.sample_pos
+    svc.advance()
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        os.remove(src)  # the temp file dies with the "process"
+        raise OSError("simulated crash at rename")
+
+    monkeypatch.setattr(os, "replace", boom)
+    with pytest.raises(OSError, match="simulated crash"):
+        svc.checkpoint(tmp_path / "a.npz")
+    monkeypatch.setattr(os, "replace", real_replace)
+
+    svc2 = _service(s)
+    svc2.restore(p)
+    assert svc2.sample_pos == pos0
+    assert [f for f in os.listdir(tmp_path)] == ["a.npz"]
+
+
+def test_recover_skips_torn_files_and_picks_newest(tmp_path):
+    s = _scenario(duration_s=30.0)
+    svc = _service(s)
+    svc.advance()
+    svc.checkpoint(tmp_path / "ckpt_a.npz")
+    svc.advance()
+    p_new = svc.checkpoint(tmp_path / "ckpt_b.npz")
+    pos = svc.sample_pos
+    # Torn npz (truncated zip), zero-byte file, and a foreign npz.
+    with open(tmp_path / "torn.npz", "wb") as f:
+        f.write(b"PK\x03\x04" + b"\x00" * 32)
+    (tmp_path / "empty.npz").write_bytes(b"")
+    np.savez(tmp_path / "foreign.npz", sample_pos=np.int64(10**9))
+
+    svc2 = _service(s)
+    got = svc2.recover(tmp_path)
+    assert got == str(p_new)
+    assert svc2.sample_pos == pos
+    skipped = [e for e in svc2.audit.tail(50) if e["event"] == "recover_skipped"]
+    assert len(skipped) == 3
+
+
+def test_recover_empty_dir_returns_none(tmp_path):
+    svc = _service(_scenario(duration_s=20.0))
+    assert svc.recover(tmp_path) is None
+    assert svc.audit.tail(1)[0]["event"] == "recover_failed"
+
+
+def test_kill_and_recover_resumes_bitwise(tmp_path):
+    """Kill after an auto-checkpoint; a fresh service recovers and the
+    glued per-window outputs equal the uninterrupted run bitwise."""
+    s = _scenario(duration_s=60.0, faulty=True)
+    ref = _drain_by_window(_service(s))
+
+    svc = _service(s, checkpoint_dir=tmp_path / "ck", checkpoint_every=1)
+    got = {}
+    for _ in range(3):
+        start = svc.sample_pos
+        got[start] = np.asarray(svc.advance().campus_grid)
+    del svc  # kill: no clean shutdown, no final checkpoint call
+
+    svc2 = _service(s)
+    assert svc2.recover(tmp_path / "ck") is not None
+    got.update(_drain_by_window(svc2))
+    assert got.keys() == ref.keys()
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k])
+
+
+def test_restore_rejects_dtype_mismatch(tmp_path):
+    """Satellite (b): a checkpoint whose leaf dtype disagrees with the
+    live state must raise a config-mismatch error, not silently cast."""
+    s = _scenario(duration_s=20.0)
+    svc = _service(s)
+    svc.advance()
+    p = svc.checkpoint(tmp_path / "a.npz")
+    with np.load(p) as z:
+        data = {k: z[k] for k in z.files}
+    data["leaf_0"] = data["leaf_0"].astype(np.float64)
+    np.savez(tmp_path / "widened.npz", **data)
+    svc2 = _service(s)
+    with pytest.raises(ValueError, match="dtype.*config/scenario mismatch"):
+        svc2.restore(tmp_path / "widened.npz")
+
+
+def test_restore_rejects_fingerprint_mismatch(tmp_path):
+    s = _scenario(duration_s=20.0)
+    svc = _service(s)
+    svc.advance()
+    p = svc.checkpoint(tmp_path / "a.npz")
+    other_spec = compliance.GridSpec.create(beta=0.2)
+    cfg = svc.cfg
+    svc2 = ConditionerService(cfg, s, other_spec, chunk_intervals=4)
+    with pytest.raises(ValueError, match="fingerprint"):
+        svc2.restore(p)
+
+
+def test_audit_rotation_bounded_and_parseable(tmp_path):
+    path = tmp_path / "audit.jsonl"
+    log = AuditLog(path, fsync=True, max_bytes=600, backups=2)
+    for i in range(60):
+        log.append("tick", i=i, payload="x" * 40)
+    files = sorted(os.listdir(tmp_path))
+    assert str(path.name) in files
+    assert f"{path.name}.1" in files and f"{path.name}.2" in files
+    assert f"{path.name}.3" not in files  # bounded retention
+    for f in files:
+        seqs = []
+        with open(tmp_path / f) as fh:
+            for line in fh:
+                seqs.append(json.loads(line)["seq"])  # every line parses
+        assert seqs == sorted(seqs)  # monotone within each file
+
+
+def test_audit_seq_continues_after_crash(tmp_path):
+    path = tmp_path / "audit.jsonl"
+    log = AuditLog(path, fsync=True)
+    for i in range(5):
+        log.append("tick", i=i)
+    del log  # crash
+    log2 = AuditLog(path, fsync=True)
+    log2.append("after")
+    with open(path) as f:
+        seqs = [json.loads(l)["seq"] for l in f]
+    assert seqs == list(range(6))
+
+
+def test_fast_chaos_drill(tmp_path):
+    """Fixed mini drill: divergence on one rack + NaN corruption on
+    another + a manual ESS trip on a third, injected between windows.
+    The service must contain all three, keep every invariant, log entries
+    and exits, and still produce a strict-JSON status.  (No stochastic
+    fault schedule here: a scheduled ESS outage on the poisoned rack
+    would — correctly — reset its warm state through the availability
+    plane and mask the divergence; the randomized sweep covers those
+    interleavings.)"""
+    s = _scenario(duration_s=60.0, faulty=False)
+    svc = _service(s, audit_path=tmp_path / "audit.jsonl")
+    svc.advance()
+    _assert_invariants(svc)
+    svc.state = _poison_warm(svc.state, [1])
+    svc.state = _corrupt_soc(svc.state, [3])
+    svc.inject_fault(0, reason="drill")
+    while not svc.exhausted:
+        res = svc.advance()
+        _assert_invariants(svc)
+        assert np.all(np.isfinite(np.asarray(res.campus_grid)))
+    sm = np.asarray(svc.state.safemode.quarantine_entries)
+    assert int(sm[3]) >= 1
+    assert int(np.asarray(svc.state.safemode.passthrough_entries)[1]) >= 1
+    events = [e["event"] for e in svc.audit.tail(200)]
+    assert "safemode_enter" in events and "safemode_exit" in events
+    st = svc.status()
+    assert st["safemode"]["quarantine_entries"] >= 1
+    json.dumps(st, allow_nan=False)
+
+
+# ------------------------------------------------------- randomized sweep
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_kill_points_resume_bitwise(tmp_path, seed):
+    """Kill at a random window (optionally tearing the newest checkpoint,
+    as a crash mid-write under a pre-atomic writer would); recovery must
+    land on a valid checkpoint and the glued outputs must equal the
+    uninterrupted run bitwise."""
+    rng = np.random.default_rng(1000 + seed)
+    s = _scenario(duration_s=60.0, faulty=True, seed=int(rng.integers(100)))
+    ref = _drain_by_window(_service(s))
+    n_windows = len(ref)
+
+    ck = tmp_path / f"ck{seed}"
+    svc = _service(s, checkpoint_dir=ck, checkpoint_every=1)
+    kill_at = int(rng.integers(1, n_windows))
+    got = {}
+    for _ in range(kill_at):
+        start = svc.sample_pos
+        got[start] = np.asarray(svc.advance().campus_grid)
+    del svc  # kill
+
+    ckpts = sorted(os.listdir(ck))
+    if len(ckpts) >= 2 and rng.random() < 0.5:
+        # Crash tore the newest checkpoint: recovery falls back to older.
+        p = ck / ckpts[-1]
+        p.write_bytes(p.read_bytes()[: int(rng.integers(1, 200))])
+
+    svc2 = _service(s)
+    assert svc2.recover(ck) is not None
+    assert svc2.sample_pos <= kill_at * 4 * svc2._k
+    got.update(_drain_by_window(svc2))
+    assert got.keys() == ref.keys()
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], got[k])
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_fault_soup_holds_invariants(tmp_path, seed):
+    """Random soup per seed: scheduled ESS trips + randomized divergence
+    poison + NaN corruption injected at random window boundaries.  Every
+    window must keep the state finite, SoC in the safe window, contained
+    racks silent; the run must end with the audit log parseable."""
+    rng = np.random.default_rng(2000 + seed)
+    n_racks = int(rng.integers(4, 8))
+    s = _scenario(
+        duration_s=60.0, n_racks=n_racks, faulty=bool(rng.random() < 0.7),
+        seed=int(rng.integers(100)),
+    )
+    svc = _service(s, audit_path=tmp_path / f"audit{seed}.jsonl")
+    while not svc.exhausted:
+        if rng.random() < 0.4:
+            svc.state = _poison_warm(
+                svc.state, [int(rng.integers(n_racks))],
+                value=float(rng.choice([1e9, 1e12, np.inf])),
+            )
+        if rng.random() < 0.3:
+            svc.state = _corrupt_soc(svc.state, [int(rng.integers(n_racks))])
+        if rng.random() < 0.2:
+            svc.inject_fault(int(rng.integers(n_racks)), reason="chaos")
+        res = svc.advance()
+        _assert_invariants(svc)
+        assert np.all(np.isfinite(np.asarray(res.campus_grid)))
+        assert np.all(np.isfinite(np.asarray(res.campus_rack)))
+    with open(tmp_path / f"audit{seed}.jsonl") as f:
+        seqs = [json.loads(l)["seq"] for l in f]
+    assert seqs == sorted(seqs)
+    json.dumps(svc.status(), allow_nan=False)

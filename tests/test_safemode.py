@@ -1,0 +1,330 @@
+"""Supervisory safe-mode control plane tests (ISSUE 9).
+
+Three layers:
+
+* pure state-machine unit tests (``core.safemode``) — trip/readmission
+  hysteresis, NaN residual handling, quarantine event counting;
+* engine end-to-end — injected ADMM divergence trips PASSTHROUGH and
+  re-admits after the hysteresis window, injected NaN state corruption
+  quarantines and reinitializes, and (the transparency contract)
+  ``safemode=False`` is bitwise identical to a supervised clean run;
+* interaction with degraded mode (PR 6) — a rack that is both
+  ESS-offline AND QP-diverged resolves to exactly ONE passthrough path:
+  the availability plane masks its residual to zero, so availability
+  faults never read as solver faults.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compliance, fleet, pdu, safemode as smode
+from repro.power import scenario as SC
+
+_DT = 1e-2  # controller dt is 5 s -> k = 500 samples/interval
+
+
+def _cfg(**kw):
+    kw.setdefault("sample_dt", _DT)
+    return pdu.make_pdu(**kw)
+
+
+def _const_trace(n_intervals, n_racks, k=500, level=0.6):
+    return jnp.full((n_intervals * k, n_racks), level, jnp.float32)
+
+
+def _run(cfg, trace, state=None, **kw):
+    st = state if state is not None else pdu.init_state(cfg, trace[0])
+    return pdu.condition(cfg, st, trace, qp_iters=30, **kw)
+
+
+def _poison_warm(st, racks, value=1e12):
+    """Garbage ADMM iterates: the next warm-started solve diverges on
+    these racks (residual stays enormous until the watchdog trips and
+    cold-starts the probe)."""
+    x = st.qp_warm.x.at[:, jnp.asarray(racks)].set(value)
+    return st._replace(qp_warm=st.qp_warm._replace(x=x))
+
+
+# ----------------------------------------------------------- state machine
+
+
+def test_trip_requires_consecutive_intervals():
+    cfg = smode.SafeModeConfig.create(resid_threshold=0.1, trip_intervals=3)
+    st = smode.init_state((2,))
+    bad = jnp.asarray([1.0, 0.0])  # rack 0 over threshold, rack 1 clean
+    for i in range(2):
+        st = smode.residual_update(cfg, st, bad)
+        assert int(st.mode[0]) == smode.NORMAL, f"tripped early at {i}"
+    st = smode.residual_update(cfg, st, bad)
+    assert int(st.mode[0]) == smode.PASSTHROUGH
+    assert int(st.mode[1]) == smode.NORMAL
+    assert int(st.passthrough_entries[0]) == 1
+    assert int(st.worst_streak[0]) == 3
+
+
+def test_nonconsecutive_residuals_do_not_trip():
+    cfg = smode.SafeModeConfig.create(resid_threshold=0.1, trip_intervals=2)
+    st = smode.init_state(())
+    for r in (1.0, 0.0, 1.0, 0.0, 1.0, 0.0):
+        st = smode.residual_update(cfg, st, jnp.asarray(r))
+    assert int(st.mode) == smode.NORMAL
+    assert int(st.passthrough_entries) == 0
+    assert int(st.worst_streak) == 1
+
+
+def test_nan_residual_counts_as_bad():
+    # NaN compares false against any threshold; the watchdog must treat a
+    # non-finite residual as a diverged solver, not a clean one.
+    cfg = smode.SafeModeConfig.create(resid_threshold=0.1, trip_intervals=2)
+    st = smode.init_state(())
+    for _ in range(2):
+        st = smode.residual_update(cfg, st, jnp.asarray(jnp.nan))
+    assert int(st.mode) == smode.PASSTHROUGH
+
+
+def test_hysteretic_readmission():
+    cfg = smode.SafeModeConfig.create(
+        resid_threshold=0.1, trip_intervals=1, readmit_intervals=3
+    )
+    st = smode.init_state(())
+    st = smode.residual_update(cfg, st, jnp.asarray(1.0))  # trip
+    assert int(st.mode) == smode.PASSTHROUGH
+    # A clean probe interrupted by one bad probe restarts the count.
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    st = smode.residual_update(cfg, st, jnp.asarray(1.0))
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    assert int(st.mode) == smode.PASSTHROUGH  # only 2 consecutive clean
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    assert int(st.mode) == smode.NORMAL
+    assert int(st.readmissions) == 1
+    assert int(st.clean_streak) == 0  # reset on re-admission
+
+
+def test_quarantine_counts_every_event_and_gates():
+    st = smode.init_state((3,))
+    corrupt = jnp.asarray([True, False, False])
+    st = smode.quarantine(st, corrupt)
+    st = smode.quarantine(st, corrupt)  # corrupted again while contained
+    assert int(st.mode[0]) == smode.QUARANTINE
+    assert int(st.quarantine_entries[0]) == 2
+    np.testing.assert_array_equal(np.asarray(smode.gate(st)), [0.0, 1.0, 1.0])
+
+
+def test_quarantined_rack_readmits_on_clean_probes():
+    cfg = smode.SafeModeConfig.create(trip_intervals=1, readmit_intervals=2)
+    st = smode.init_state(())
+    st = smode.quarantine(st, jnp.asarray(True))
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    st = smode.residual_update(cfg, st, jnp.asarray(0.0))
+    assert int(st.mode) == smode.NORMAL
+    assert int(st.readmissions) == 1
+
+
+# ------------------------------------------------------- engine end-to-end
+
+
+@pytest.mark.slow
+def test_safemode_off_is_bitwise_identical():
+    """Transparency contract: supervising a clean run changes nothing."""
+    trace = _const_trace(6, 4) + 0.2 * jnp.sin(
+        jnp.linspace(0.0, 40.0, 6 * 500)
+    )[:, None] * jnp.linspace(0.5, 1.0, 4)[None, :]
+    base_cfg = _cfg(track_health=True)
+    sm_cfg = _cfg(track_health=True, safemode=True)
+    g0, st0, t0 = jax.jit(lambda s, r: _run(base_cfg, r, state=s))(
+        pdu.init_state(base_cfg, trace[0]), trace
+    )
+    g1, st1, t1 = jax.jit(lambda s, r: _run(sm_cfg, r, state=s))(
+        pdu.init_state(sm_cfg, trace[0]), trace
+    )
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(st0), jax.tree_util.tree_leaves(st1)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for name in ("soc", "command", "qp_residual", "target"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(t0, name)), np.asarray(getattr(t1, name))
+        )
+    assert np.all(np.asarray(t1.safemode_mode) == smode.NORMAL)
+
+
+@pytest.mark.slow
+def test_divergence_trips_and_readmits():
+    cfg = _cfg(
+        safemode=True,
+        safemode_params=smode.SafeModeConfig.create(
+            resid_threshold=0.05, trip_intervals=2, readmit_intervals=3
+        ),
+    )
+    trace = _const_trace(10, 6)
+    st = _poison_warm(pdu.init_state(cfg, trace[0]), [1, 4])
+    grid, st2, telem = jax.jit(lambda s, r: _run(cfg, r, state=s))(st, trace)
+    mode = np.asarray(telem.safemode_mode)  # (10, 6)
+    # Poisoned racks: diverge, trip after 2 bad intervals, probe clean
+    # (cold-started) and re-admit after 3 clean intervals.
+    for r in (1, 4):
+        assert mode[0, r] == smode.NORMAL and mode[1, r] == smode.PASSTHROUGH
+        assert np.any(mode[:, r] == smode.NORMAL) and mode[-1, r] == smode.NORMAL
+        row = mode[:, r]
+        first_normal = int(np.argmax(row[1:] == smode.NORMAL)) + 1
+        assert np.all(row[1:first_normal] == smode.PASSTHROUGH)
+    assert np.all(mode[:, [0, 2, 3, 5]] == smode.NORMAL)
+    # Contained racks never command their battery; the output stays finite.
+    cmd = np.asarray(telem.command)
+    assert np.all(cmd[mode != smode.NORMAL] == 0.0)
+    assert np.all(np.isfinite(np.asarray(grid)))
+    sm = st2.safemode
+    np.testing.assert_array_equal(
+        np.asarray(sm.passthrough_entries), [0, 1, 0, 0, 1, 0]
+    )
+    np.testing.assert_array_equal(np.asarray(sm.readmissions), [0, 1, 0, 0, 1, 0])
+    assert int(np.max(np.asarray(sm.worst_streak))) >= 2
+
+
+@pytest.mark.slow
+def test_nan_corruption_quarantines_and_reinitializes():
+    cfg = _cfg(safemode=True, track_health=True)
+    trace = _const_trace(4, 5)
+    st = pdu.init_state(cfg, trace[0])
+    soc = st.ess_state.soc.at[2].set(jnp.nan)
+    st = st._replace(ess_state=st.ess_state._replace(soc=soc))
+    grid, st2, telem = jax.jit(lambda s, r: _run(cfg, r, state=s))(st, trace)
+    sm = st2.safemode
+    np.testing.assert_array_equal(
+        np.asarray(sm.quarantine_entries), [0, 0, 1, 0, 0]
+    )
+    mode = np.asarray(telem.safemode_mode)
+    assert mode[0, 2] == smode.QUARANTINE
+    # Every carried float leaf is finite again (the reinit worked) and the
+    # grid trace never exported a non-finite sample.
+    for leaf in jax.tree_util.tree_leaves(st2):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float64)))
+    assert np.all(np.isfinite(np.asarray(grid)))
+    assert np.all(np.asarray(telem.command)[mode != smode.NORMAL] == 0.0)
+
+
+@pytest.mark.slow
+def test_unsupervised_corruption_propagates():
+    """Counter-test: without safe mode the same NaN poisons the stream —
+    this is the failure the sanitizer exists for."""
+    cfg = _cfg()
+    trace = _const_trace(2, 3)
+    st = pdu.init_state(cfg, trace[0])
+    soc = st.ess_state.soc.at[0].set(jnp.nan)
+    st = st._replace(ess_state=st.ess_state._replace(soc=soc))
+    grid, st2, _ = jax.jit(lambda s, r: _run(cfg, r, state=s))(st, trace)
+    assert not np.all(np.isfinite(np.asarray(st2.ess_state.soc)))
+
+
+# -------------------------------------------- interaction with PR-6 plane
+
+
+@pytest.mark.slow
+def test_offline_and_diverged_is_exactly_one_passthrough_path():
+    """A rack both ESS-offline AND QP-diverged must resolve to the
+    availability plane alone: its residual arrives pre-masked to zero, so
+    the solver watchdog never counts an availability fault as a solver
+    fault — offline+poisoned is bitwise the plain offline run."""
+    cfg = _cfg(degraded_mode=True, safemode=True)
+    trace = _const_trace(5, 4)
+    offline = jnp.ones((4,), jnp.float32).at[1].set(0.0)
+    st_a = pdu.init_state(cfg, trace[0])
+    st_b = _poison_warm(st_a, [1])
+    run = jax.jit(
+        lambda s, r: _run(cfg, r, state=s, ess_online=offline)
+    )
+    g_a, sa, ta = run(st_a, trace)
+    g_b, sb, tb = run(st_b, trace)
+    np.testing.assert_array_equal(np.asarray(g_a), np.asarray(g_b))
+    np.testing.assert_array_equal(
+        np.asarray(ta.safemode_mode), np.asarray(tb.safemode_mode)
+    )
+    assert np.all(np.asarray(tb.safemode_mode) == smode.NORMAL)
+    assert int(np.sum(np.asarray(sb.safemode.passthrough_entries))) == 0
+    # (The poisoned warm state itself is reset by the offline plane, so
+    # even the carried iterates agree.)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(sa), jax.tree_util.tree_leaves(sb)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_trip_then_offline_then_readmit_at_interval_boundaries():
+    """Boundary regression for the combined planes: a rack trips the
+    solver watchdog, goes ESS-offline while contained, comes back online,
+    and re-admits — exactly one passthrough entry, commands zero for the
+    whole containment, and the streamed (3-call) run matches the counters
+    a single supervisor would produce."""
+    cfg = _cfg(
+        degraded_mode=True,
+        safemode=True,
+        safemode_params=smode.SafeModeConfig.create(
+            resid_threshold=0.05, trip_intervals=1, readmit_intervals=2
+        ),
+    )
+    k = 500
+    st = _poison_warm(pdu.init_state(cfg, _const_trace(1, 3)[0]), [0])
+    run = jax.jit(
+        lambda s, r, on: _run(cfg, r, state=s, ess_online=on),
+        static_argnums=(),
+    )
+    on = jnp.ones((3,), jnp.float32)
+    off0 = on.at[0].set(0.0)
+    modes, cmds = [], []
+    # Window 1 (2 intervals, online): poisoned rack trips.
+    g, st, t = run(st, _const_trace(2, 3), on)
+    modes.append(np.asarray(t.safemode_mode)); cmds.append(np.asarray(t.command))
+    assert np.asarray(t.safemode_mode)[0, 0] == smode.PASSTHROUGH
+    # Window 2 (1 interval): the tripped rack also goes ESS-offline.  The
+    # availability plane masks its residual, which counts as a clean probe
+    # — no second entry, no quarantine.
+    g, st, t = run(st, _const_trace(1, 3), off0)
+    modes.append(np.asarray(t.safemode_mode)); cmds.append(np.asarray(t.command))
+    # Window 3 (3 intervals, back online): clean probes complete the
+    # hysteresis window and the rack re-admits.
+    g, st, t = run(st, _const_trace(3, 3), on)
+    modes.append(np.asarray(t.safemode_mode)); cmds.append(np.asarray(t.command))
+    mode = np.concatenate(modes)
+    cmd = np.concatenate(cmds)
+    assert mode[-1, 0] == smode.NORMAL
+    assert int(np.asarray(st.safemode.passthrough_entries)[0]) == 1
+    assert int(np.asarray(st.safemode.quarantine_entries)[0]) == 0
+    assert int(np.asarray(st.safemode.readmissions)[0]) == 1
+    assert np.all(cmd[mode != smode.NORMAL] == 0.0)
+    assert np.all(mode[:, 1:] == smode.NORMAL)
+
+
+# --------------------------------------------------------- fleet plumbing
+
+
+@pytest.mark.slow
+def test_fleet_safemode_trace_and_summary():
+    s = SC.mixed_campus(
+        4, ("llama3_2_1b", "qwen1_5_4b"), duration_s=40.0, sample_hz=100.0,
+        seed=7,
+    )
+    spec = compliance.GridSpec.create()
+    cfg_on = pdu.make_pdu(sample_dt=1e-2, safemode=True)
+    res = fleet.condition(
+        s, cfg_on, spec, stream=fleet.StreamOptions(chunk_intervals=4),
+        qp_iters=30,
+    )
+    trace = np.asarray(res.safemode_trace)
+    assert trace.shape[1] == 6
+    assert np.all(trace[:, 0] == 1.0)  # clean run: every rack NORMAL
+    assert np.all(trace[:, 1:5] == 0.0)
+    summ = res.safemode_summary()
+    assert summ["n_normal"] == 4 and summ["n_quarantined"] == 0
+    cfg_off = pdu.make_pdu(sample_dt=1e-2)
+    res_off = fleet.condition(
+        s, cfg_off, spec, stream=fleet.StreamOptions(chunk_intervals=4),
+        qp_iters=30,
+    )
+    assert np.all(np.asarray(res_off.safemode_trace) == 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(res.campus_grid), np.asarray(res_off.campus_grid)
+    )
