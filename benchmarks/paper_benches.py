@@ -26,9 +26,59 @@ QUICK = os.environ.get("REPRO_BENCH_QUICK", "") == "1"
 # string.
 UNITS: dict[str, dict] = {}
 
+# Campus workloads registered by the bench functions as they run, for the
+# ``--profile`` pass: {bench_name: {"cfg", "scenario", "spec",
+# "chunk_intervals", "qp_iters"}}.  run.py re-runs each through the HOST
+# engine (the one whose render/solve/assemble stages are host-visible) with
+# ``core.profiling`` spans enabled and prints the phase breakdown.
+PROFILES: dict[str, dict] = {}
+
 
 def _q(full, quick):
     return quick if QUICK else full
+
+
+def profile_kernel_estimate(w: dict) -> float:
+    """Estimated seconds the hardware megakernel contributes to one run of
+    the registered workload: one controller interval timed standalone
+    (jitted, same backend dispatch the engines use) scaled by the interval
+    count.  The in-engine solve phase fuses QP solve + kernel into one
+    program, so this standalone estimate is how ``--profile`` splits them.
+    """
+    cfg, s = w["cfg"], w["scenario"]
+    hz = float(s.sample_hz)
+    k = max(int(round(float(cfg.controller.dt) * hz)), 1)
+    chunk = jax.jit(lambda: SC.render(s, 0, k))()
+    if chunk.ndim == 1:
+        chunk = chunk[:, None]
+    # Kernel-only timing: the engines bridge sensor-dropout NaN before the
+    # kernel sees the block, so feed it finite samples.
+    chunk = jnp.nan_to_num(chunk, nan=0.0)
+    st = pdu.init_state(cfg, chunk[0])
+    ep = cfg.ess_params
+    filt = st.filter_obj
+    kkw = dict(
+        beta=float(ep.beta), dt=1.0 / hz, q_max=float(ep.q_max),
+        eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+        p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+        soc_max=float(ep.soc_safe_max),
+    )
+    hin = None
+    if getattr(cfg, "track_health", False):
+        from repro.core import health as _h
+
+        hin = (_h.step_consts(cfg.health), tuple(st.health))
+    from repro.kernels import ops as _ops
+
+    run = jax.jit(lambda c: _ops.pdu_health_sim(
+        c, st.ess_state.g_filter, st.ess_state.soc, st.filter_state,
+        filt.ad, filt.bd, filt.c[0], health=hin, **kkw,
+    ))
+    jax.block_until_ready(run(chunk))  # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(chunk))
+    per_interval = time.perf_counter() - t0
+    return per_interval * (-(-int(s.total_samples) // k))
 
 
 def _timeit(fn, *args, n=3):
@@ -453,6 +503,9 @@ def bench_mixed_campus_health():
     run()  # compile
     us, res = _best_of(run, lambda r: r.campus_grid)
     UNITS["mixed_campus_health"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
+    PROFILES["mixed_campus_health"] = dict(
+        cfg=cfg, scenario=s, spec=spec, chunk_intervals=4, qp_iters=30
+    )
 
     if QUICK:
         # Megakernel-vs-ref agreement ride-along: one controller interval of
@@ -535,6 +588,9 @@ def bench_mixed_campus_safemode():
     UNITS["mixed_campus_safemode"] = dict(
         racks=n_racks, samples=s.total_samples * n_racks
     )
+    PROFILES["mixed_campus_safemode"] = dict(
+        cfg=cfg_on, scenario=s, spec=spec, chunk_intervals=4, qp_iters=30
+    )
     LAST_US["mixed_campus_safemode"] = us
 
     trace = np.asarray(res.safemode_trace)
@@ -616,6 +672,9 @@ def bench_mixed_campus_faulty():
     run("scanned")  # compile
     us, res = _best_of(lambda: run("scanned"), lambda r: r.campus_grid)
     UNITS["mixed_campus_faulty"] = dict(racks=n_racks, samples=s.total_samples * n_racks)
+    PROFILES["mixed_campus_faulty"] = dict(
+        cfg=cfg, scenario=s, spec=spec, chunk_intervals=4, qp_iters=30
+    )
 
     if QUICK:
         host = run("host")
@@ -628,6 +687,44 @@ def bench_mixed_campus_faulty():
         np.testing.assert_allclose(
             np.asarray(res.campus_grid), np.asarray(host.campus_grid), atol=1e-6
         )
+
+        # Megakernel-vs-ref ride-along on the fused weight operand
+        # (mirrors bench_mixed_campus_health's QUICK block): one mid-trace
+        # controller interval of THIS campus, with the ESS availability
+        # weight rendered IN-KERNEL from the schedule's boundary-event
+        # tables, through the interpret-mode Pallas megakernel vs the jnp
+        # reference the engines run on CPU.  SoC path, grid, and machine
+        # state bitwise.
+        from repro.kernels import ops as _ops, ref as _kref
+
+        k = int(round(cfg.controller.dt * hz))
+        t0q = (s.total_samples // (2 * k)) * k
+        chunk = jnp.nan_to_num(jax.jit(lambda: SC.render(s, t0q, k))(), nan=0.0)
+        st = pdu.init_state(cfg, chunk[0])
+        ep = cfg.ess_params
+        filt = st.filter_obj
+        kkw = dict(
+            beta=float(ep.beta), dt=1.0 / hz, q_max=float(ep.q_max),
+            eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+            p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+            soc_max=float(ep.soc_safe_max),
+        )
+        ev = (
+            sched.ess_start.T, sched.ess_end.T,
+            jnp.ones((n_racks,), jnp.float32),
+            jnp.asarray(t0q, jnp.int32), jnp.asarray(t0q + k - 1, jnp.int32),
+        )
+        a = (chunk, st.ess_state.g_filter, st.ess_state.soc, st.filter_state,
+             filt.ad, filt.bd, filt.c[0])
+        ekw = dict(ess_events=ev, ess_edge=max(s.edge_width, 1), **kkw)
+        r_ref = _kref.pdu_health_sim(*a, **ekw)
+        r_pl = _ops.pdu_health_sim(*a, force="pallas", **ekw)
+        np.testing.assert_array_equal(np.asarray(r_ref[1]), np.asarray(r_pl[1]))
+        np.testing.assert_array_equal(np.asarray(r_ref[0]), np.asarray(r_pl[0]))
+        for lf_r, lf_p in zip(
+            jax.tree_util.tree_leaves(r_ref[2]), jax.tree_util.tree_leaves(r_pl[2])
+        ):
+            np.testing.assert_array_equal(np.asarray(lf_r), np.asarray(lf_p))
 
     frac = np.asarray(res.ess_online_frac)
     assert np.all(np.isfinite(np.asarray(res.campus_grid))), (
@@ -645,7 +742,7 @@ def bench_mixed_campus_faulty():
         f"campus_ramp={float(res.report_grid.max_ramp):.4f}/s "
         f"ok={bool(res.report_grid.ramp_ok)} "
         f"overhead_vs_clean={overhead} us_per_rack={us / n_racks:.0f}"
-        + (" engines_agree=True" if QUICK else "")
+        + (" engines_agree=True megakernel_agrees=True" if QUICK else "")
     )
 
 

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compliance, health as hlt, pdu, safemode as smode
+from repro.core import compliance, health as hlt, pdu, profiling as _prof, \
+    safemode as smode
 from repro.sharding.rules import shard_racks, shard_racks_in_jit  # noqa: F401
 # (mesh utilities live in ``sharding.rules`` now; re-exported here for
 # compatibility — ``fleet.shard_racks`` keeps working.)
@@ -362,7 +363,8 @@ def make_condition_step(cfg: pdu.PDUConfig, *, qp_iters: int = 30, donate: bool 
     return _cached_engine(_engine_key(cfg, "condition_step", qp_iters, donate), build)
 
 
-def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
+def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank,
+                      use_faults=False, fault_edge=1):
     """Cached jitted host-loop chunk step: condition + accumulate on-device.
 
     Campus aggregates are written into the preallocated ``_CampusAccum``
@@ -373,14 +375,20 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
     ``jnp.maximum`` chains.  Write offsets use the *full* chunk geometry
     (``chunk`` samples / ``n_int`` intervals), not the possibly-shorter
     incoming block, so the ragged tail lands at the right position.
+
+    With ``use_faults`` the degraded step carries the fault schedule itself
+    (a small episode-table pytree) instead of streamed per-chunk mask/weight
+    blocks; the chunk's absolute start sample is ``c_idx * chunk`` in-jit,
+    so one compilation still serves every full chunk.
     """
 
     def build():
-        def step_impl(st, acc, tr, c_idx, on, wt):
+        def step_impl(st, acc, tr, c_idx, on, wt, fl):
             if mesh is not None:
                 tr = shard_racks_in_jit(tr, mesh, rack_axis)
             st2, ch = pdu.condition_campus(
-                cfg, st, tr, qp_iters=qp_iters, ess_online=on, ess_weight=wt
+                cfg, st, tr, qp_iters=qp_iters, ess_online=on, ess_weight=wt,
+                faults=fl, chunk_start=c_idx * chunk, fault_edge=fault_edge,
             )
             acc2 = _CampusAccum(
                 campus_rack=jax.lax.dynamic_update_slice(
@@ -406,22 +414,28 @@ def _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank):
             )
             return st2, acc2
 
-        if cfg.degraded_mode:
+        if cfg.degraded_mode and use_faults:
+            # Fault-schedule variant: the schedule rides in as a traced
+            # pytree and availability renders inside the conditioning scan.
+            @functools.partial(jax.jit, donate_argnums=(0, 1))
+            def step(st, acc, tr, c_idx, fl):
+                return step_impl(st, acc, tr, c_idx, None, None, fl)
+        elif cfg.degraded_mode:
             # Degraded variant carries the chunk's availability-mask rows
             # and (optionally) the per-sample hardware weight block.
             @functools.partial(jax.jit, donate_argnums=(0, 1))
             def step(st, acc, tr, c_idx, on, wt):
-                return step_impl(st, acc, tr, c_idx, on, wt)
+                return step_impl(st, acc, tr, c_idx, on, wt, None)
         else:
             @functools.partial(jax.jit, donate_argnums=(0, 1))
             def step(st, acc, tr, c_idx):
-                return step_impl(st, acc, tr, c_idx, None, None)
+                return step_impl(st, acc, tr, c_idx, None, None, None)
 
         return step
 
     return _cached_engine(
         _engine_key(cfg, "host_stream", qp_iters, chunk, n_int, mesh, rack_axis,
-                    bank),
+                    bank, use_faults, fault_edge),
         build,
     )
 
@@ -474,6 +488,8 @@ def _condition_fleet_streaming_impl(
     state: pdu.PDUState | None = None,
     ess_online: jax.Array | None = None,
     ess_weight: jax.Array | None = None,
+    faults=None,
+    fault_edge: int = 1,
 ) -> ConditioningResult:
     """Campus-scale conditioning in time chunks with bounded working set.
 
@@ -510,8 +526,14 @@ def _condition_fleet_streaming_impl(
     (sliced per chunk) or one ``(R,)`` mask applied throughout; semantics
     as in ``pdu.condition``.  ``ess_weight`` is the optional per-sample
     ``(T, R)`` hardware availability weight for the whole stream (sliced
-    per chunk by sample).  ``condition_scenario_streaming`` derives both
-    from the scenario's attached fault schedule automatically.
+    per chunk by sample).  ``faults`` (mutually exclusive with both, and
+    preferred) is a ``power.faults.FaultSchedule`` for the whole stream:
+    availability renders inside the conditioning scan from the episode
+    boundary tables instead of streaming ``(T, R)`` weight blocks through
+    every chunk — bitwise-identical output at a fraction of the cost
+    (``fault_edge`` is the schedule's static edge ramp width in samples).
+    The scenario engines derive the right form from an attached fault
+    schedule automatically.
     """
     k = max(int(round(float(cfg.controller.dt) / cfg.sample_dt)), 1)
     n_int = max(int(chunk_intervals), 1)
@@ -530,10 +552,20 @@ def _condition_fleet_streaming_impl(
                 "ess_online/ess_weight require a degraded-mode config "
                 "(make_pdu(..., degraded_mode=True))"
             )
+        if faults is not None:
+            raise ValueError(
+                "faults is mutually exclusive with ess_online/ess_weight "
+                "(the schedule renders both internally)"
+            )
         if ess_online is not None:
             ess_online = jnp.asarray(ess_online, jnp.float32)
         if ess_weight is not None:
             ess_weight = jnp.asarray(ess_weight, jnp.float32)
+    if faults is not None and not cfg.degraded_mode:
+        raise ValueError(
+            "faults requires a degraded-mode config "
+            "(make_pdu(..., degraded_mode=True))"
+        )
 
     if state is None:
         state = pdu.init_state(cfg, provider(0, 1)[0], soc0=soc0)
@@ -543,7 +575,9 @@ def _condition_fleet_streaming_impl(
         state = jax.tree_util.tree_map(jnp.copy, state)
 
     bank = _make_bank(grid_spec, cfg, t_total)
-    step = _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank)
+    step = _host_stream_step(cfg, qp_iters, chunk, n_int, mesh, rack_axis, bank,
+                             use_faults=faults is not None,
+                             fault_edge=int(fault_edge))
     acc = _CampusAccum(
         campus_rack=jnp.zeros((n_chunks * chunk,), jnp.float32),
         campus_grid=jnp.zeros((n_chunks * chunk,), jnp.float32),
@@ -562,29 +596,39 @@ def _condition_fleet_streaming_impl(
         # max_qp_residual never see whole pad intervals and stay
         # chunk-size invariant (and scanned-engine identical).
         n = min(chunk, t_total - t0)
-        tr = provider(t0, n)
+        with _prof.span("render") as sync:
+            tr = sync(provider(t0, n))
         if mesh is not None and not isinstance(tr, jax.Array):
             tr = shard_racks(tr, mesh, rack_axis)  # host-resident input
-        if cfg.degraded_mode:
-            if ess_online is None or ess_online.ndim < 2:
-                on = ess_online  # one mask (or None) for the whole stream
+        with _prof.span("solve") as sync:
+            if cfg.degraded_mode and faults is not None:
+                state, acc = step(
+                    state, acc, tr, jnp.asarray(c_idx, jnp.int32), faults
+                )
+            elif cfg.degraded_mode:
+                if ess_online is None or ess_online.ndim < 2:
+                    on = ess_online  # one mask (or None) for the whole stream
+                else:
+                    on = ess_online[c_idx * n_int : c_idx * n_int + -(-n // k)]
+                # The hardware weight is per *sample*: it slices by samples.
+                wt = None if ess_weight is None else ess_weight[t0 : t0 + n]
+                state, acc = step(
+                    state, acc, tr, jnp.asarray(c_idx, jnp.int32), on, wt
+                )
             else:
-                on = ess_online[c_idx * n_int : c_idx * n_int + -(-n // k)]
-            # The hardware weight is per *sample*, so it slices by samples.
-            wt = None if ess_weight is None else ess_weight[t0 : t0 + n]
-            state, acc = step(
-                state, acc, tr, jnp.asarray(c_idx, jnp.int32), on, wt
-            )
-        else:
-            state, acc = step(state, acc, tr, jnp.asarray(c_idx, jnp.int32))
+                state, acc = step(state, acc, tr, jnp.asarray(c_idx, jnp.int32))
+            sync(acc.worst)
 
-    return _finish_streaming(
-        cfg, grid_spec, state,
-        acc.campus_rack[:t_total], acc.campus_grid[:t_total],
-        acc.soc_mean[:n_ctrl], acc.worst,
-        bank, acc.obs, acc.health_trace, acc.ess_frac[:n_ctrl],
-        acc.sm_trace,
-    )
+    with _prof.span("host-sync") as sync:
+        res = _finish_streaming(
+            cfg, grid_spec, state,
+            acc.campus_rack[:t_total], acc.campus_grid[:t_total],
+            acc.soc_mean[:n_ctrl], acc.worst,
+            bank, acc.obs, acc.health_trace, acc.ess_frac[:n_ctrl],
+            acc.sm_trace,
+        )
+        sync((res.campus_grid, res.report_grid))
+    return res
 
 
 def _condition_chunk(cfg, scen, st, t0, n, *, k, qp_iters, prep=None):
@@ -594,14 +638,15 @@ def _condition_chunk(cfg, scen, st, t0, n, *, k, qp_iters, prep=None):
     grid-region engines (``core.grid``) — keeping it single-sourced is what
     keeps the sharded region run bitwise against the sequential loop.  With
     a fault schedule attached to the scenario (and a degraded-mode config)
-    the per-interval ESS availability mask and the per-sample hardware
-    weight are derived *inside* the jit from the schedule's episode table;
-    both are pure in the absolute sample index (like the renderer), so the
-    result is chunk- and resume-invariant by construction.  ``prep``
-    post-processes the rendered ``(n, R)`` block (e.g. an in-jit rack
-    sharding constraint).
+    the schedule itself is handed to ``pdu.condition`` together with the
+    chunk's absolute start sample: availability is rendered *inside* the
+    conditioning scan from the episode boundary tables (the degraded fast
+    path; safe-mode configs fall back to the streamed derivation
+    internally).  Every rendered quantity is pure in the absolute sample
+    index (like the trace renderer), so the result is chunk- and
+    resume-invariant by construction.  ``prep`` post-processes the rendered
+    ``(n, R)`` block (e.g. an in-jit rack sharding constraint).
     """
-    from repro.power import faults as FLT
     from repro.power import scenario as SC
 
     # Trace-time structural check: the caller's jit retraces automatically
@@ -614,14 +659,9 @@ def _condition_chunk(cfg, scen, st, t0, n, *, k, qp_iters, prep=None):
         tr = prep(tr)
     return pdu.condition_campus(
         cfg, st, tr, qp_iters=qp_iters,
-        ess_online=(
-            FLT.interval_online(scen.faults, t0, -(-n // k), k)
-            if faulty else None
-        ),
-        ess_weight=(
-            FLT.ess_weight(scen.faults, t0, n, scen.edge_width)
-            if faulty else None
-        ),
+        faults=scen.faults if faulty else None,
+        chunk_start=t0,
+        fault_edge=scen.edge_width if faulty else 1,
     )
 
 
@@ -827,9 +867,10 @@ def _check_scenario_faults(scenario, cfg: pdu.PDUConfig) -> None:
 
 def _scenario_fault_data(cfg: pdu.PDUConfig, scenario) -> dict:
     """Precomputed availability mask/weight for engines that take them as
-    data (host loop, one-shot) — the same pure functions the scanned engine
-    evaluates in-jit, so every engine stays bitwise identical under any
-    fault schedule."""
+    data (the one-shot engine, and the host loop when the caller overrides
+    one of the two inputs) — the same pure functions the fast path renders
+    from the episode tables, so every engine stays bitwise identical under
+    any fault schedule."""
     if not (cfg.degraded_mode and getattr(scenario, "faults", None) is not None):
         return {}
     from repro.power import faults as FLT
@@ -864,11 +905,16 @@ def _condition_scenario_host_impl(
 
     _check_scenario_rate(scenario, cfg)
     _check_scenario_faults(scenario, cfg)
-    fault_data = _scenario_fault_data(cfg, scenario)
-    if ess_online is None:
-        ess_online = fault_data.get("ess_online")
-    if ess_weight is None:
-        ess_weight = fault_data.get("ess_weight")
+    faulty = cfg.degraded_mode and getattr(scenario, "faults", None) is not None
+    if faulty and (ess_online is not None or ess_weight is not None):
+        # Caller-supplied overrides win; fill the missing half the legacy
+        # streamed way so overriding one input does not change the other.
+        fault_data = _scenario_fault_data(cfg, scenario)
+        if ess_online is None:
+            ess_online = fault_data.get("ess_online")
+        if ess_weight is None:
+            ess_weight = fault_data.get("ess_weight")
+        faulty = False
     return _condition_fleet_streaming_impl(
         cfg,
         SC.chunk_provider(scenario),
@@ -882,6 +928,8 @@ def _condition_scenario_host_impl(
         state=state,
         ess_online=ess_online,
         ess_weight=ess_weight,
+        faults=scenario.faults if faulty else None,
+        fault_edge=scenario.edge_width if faulty else 1,
     )
 
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import compliance, controller as ctrl, ess, filters, health as hlt, \
     safemode as smode, sizing
 from repro.kernels import ops
+from repro.power import faults as flt
 from repro.utils import pytree_dataclass, static_field
 
 
@@ -238,6 +239,9 @@ def condition(
     use_plan: bool = True,
     ess_online: jax.Array | None = None,
     ess_weight: jax.Array | None = None,
+    faults: flt.FaultSchedule | None = None,
+    chunk_start: jax.Array | int = 0,
+    fault_edge: int = 1,
 ) -> tuple[jax.Array, PDUState, Telemetry]:
     """Condition a trace chunk; carries state across calls (streaming).
 
@@ -295,6 +299,23 @@ def condition(
     ``ess_weight`` (composed with the manual-override state and the
     finite-guard) while ``ess_online`` keeps governing the software plane
     (QP admission, command zeroing, telemetry).
+
+    ``faults`` (mutually exclusive with explicit ``ess_online`` /
+    ``ess_weight`` arrays) is the compiled fast path for the same
+    semantics: pass the ``FaultSchedule`` itself plus the chunk's absolute
+    ``chunk_start`` sample and the scenario's ``fault_edge`` width, and
+    every degraded-mode signal is rendered from O(episodes) boundary
+    events instead of streamed ``(T, R)`` blocks — the interval
+    online/sensed masks are tiny ``(n_ctrl, R)`` schedule lookups, the
+    NaN sensor bridge becomes a per-interval hold-index gather *inside*
+    the scan body (on the materialized xs slice, so the rendered trace
+    keeps a single consumer chain — EXPERIMENTS §Perf-8 records the
+    producer-duplication pathology this avoids), and the per-sample ESS
+    weight is rendered inside the megakernel from the episode tables
+    (``ops.pdu_health_sim`` ``ess_events``).  Outputs are bit-identical
+    to the streamed-array path at any chunk split and resume point.
+    Safe-mode cfgs fall back to the streamed derivation (the supervisor
+    composes its own per-sample hardware-weight ramps).
     """
     degraded = cfg.degraded_mode
     safemode = cfg.safemode
@@ -302,6 +323,16 @@ def condition(
         raise ValueError(
             "ess_online/ess_weight require a cfg with degraded_mode=True"
         )
+    if faults is not None:
+        if not degraded:
+            raise ValueError("faults requires a cfg with degraded_mode=True")
+        if ess_online is not None or ess_weight is not None:
+            raise ValueError(
+                "pass either a FaultSchedule or explicit ess_online/"
+                "ess_weight arrays, not both"
+            )
+        if rack_power.ndim < 2:
+            raise ValueError("the fault fast path needs a batched (T, R) trace")
     dt = cfg.sample_dt
     k = max(int(round(float(cfg.controller.dt) / dt)), 1)
     t = rack_power.shape[0]
@@ -309,7 +340,35 @@ def condition(
     pad = n_ctrl * k - t
     batch = rack_power.shape[1:]
 
-    if degraded:
+    fast = faults is not None and not safemode
+    if faults is not None and safemode:
+        # The supervisor slews its own per-sample hardware weight across
+        # each interval; composing that ramp with in-kernel event
+        # rendering would need a second weight operand, so safe-mode runs
+        # keep the streamed derivation (identical values by the faults
+        # equivalence contract).
+        ess_online = flt.interval_online(faults, chunk_start, n_ctrl, k)
+        ess_weight = flt.ess_weight(faults, chunk_start, t, fault_edge)
+        faults = None
+
+    if fast:
+        cs = jnp.asarray(chunk_start, jnp.int32)
+        t_last = cs + (t - 1)
+        # Software plane + finite-guard, straight from the episode tables:
+        # no isfinite/bridge pass over the rendered trace before the scan,
+        # so the render's only consumer is the scan's xs buffer.
+        sensed = flt.interval_sensed(faults, cs, n_ctrl, k, stop=cs + t)
+        arg_rows = flt.interval_online(faults, cs, n_ctrl, k)
+        hw_base = jnp.broadcast_to(
+            state.ess_online, (n_ctrl,) + batch
+        ) * sensed.astype(jnp.float32)
+        on_rows = arg_rows * hw_base
+        # Compact megakernel operand: (E, R) boundary tables + per-interval
+        # absolute start samples (the per-sample weight renders in-kernel).
+        ev_st = faults.ess_start.T
+        ev_en = faults.ess_end.T
+        i0_rows = cs + k * jnp.arange(n_ctrl, dtype=jnp.int32)
+    elif degraded:
         finite = jnp.isfinite(rack_power)
         fpad = (
             jnp.concatenate([finite, jnp.repeat(finite[-1:], pad, axis=0)], axis=0)
@@ -392,11 +451,39 @@ def condition(
             carry, sm = carry
         else:
             sm = None
-        (
-            x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm, hstate,
-            step_idx,
-        ) = carry
-        if degraded:
+        if fast:
+            (
+                x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm,
+                hstate, step_idx, lg,
+            ) = carry
+        else:
+            (
+                x_f, es, u_prev, cmd_applied, cmd_target, soc_ema, warm,
+                hstate, step_idx,
+            ) = carry
+        if fast:
+            rack_chunk, on_row, base_row, i0 = xs
+            # --- in-body sensor bridge (schedule-compiled) ---------------
+            # Operates on the materialized (k, R) xs slice: dark samples
+            # take the raw value at the covering episode's ``start - 1``
+            # (always finite — episodes are coalesced with >= 1 healthy
+            # sample between them), or the carried last-good row when that
+            # index precedes this interval.  Bit-identical to running
+            # ``bridge_sensors`` over the whole chunk (the associative-scan
+            # bridge gathers the same raw samples), without giving the
+            # pre-scan render a second consumer.  Indices clamp to the
+            # last real sample so ZOH pad rows replicate its bridge.
+            idx = jnp.minimum(i0 + jnp.arange(k, dtype=jnp.int32), t_last)
+            dark, hold = flt.sensor_dark_hold(faults, idx)
+            loc = hold - i0
+            held = jnp.take_along_axis(
+                jnp.where(dark, 0.0, rack_chunk), jnp.clip(loc, 0, k - 1), axis=0
+            )
+            rack_chunk = jnp.where(
+                dark, jnp.where(loc >= 0, held, lg), rack_chunk
+            )
+            lg = rack_chunk[-1]
+        elif degraded:
             rack_chunk, on_row, hw_chunk = xs
         else:
             rack_chunk = xs
@@ -496,7 +583,15 @@ def condition(
         lift = (lambda x: x) if batched else (lambda x: x[None])
         rc = rack_chunk if batched else rack_chunk[:, None]
         g0, s0, xf0 = lift(es.g_filter), lift(es.soc), lift(x_f)
-        if degraded:
+        if fast:
+            # Per-sample ESS weight rendered in-kernel from the episode
+            # tables (same boundary selection + clip arithmetic as
+            # faults.ess_weight, so bitwise vs the streamed product).
+            mask_kw = dict(
+                ess_events=(ev_st, ev_en, base_row, i0, t_last),
+                ess_edge=fault_edge,
+            )
+        elif degraded:
             hw = jnp.broadcast_to(hw_chunk, (k,) + batch)
             if safemode:
                 hw = hw * sm_w
@@ -626,6 +721,8 @@ def condition(
             x_f2, es2, new_u_prev, cmd_target, new_cmd, soc_meas,
             warm2, hstate2, step_idx + 1,
         )
+        if fast:
+            carry2 = carry2 + (lg,)
         if safemode:
             carry2 = (carry2, sm)
         return carry2, (grid, telem)
@@ -635,15 +732,23 @@ def condition(
         state.cmd_applied, state.cmd_target, state.soc_ema, state.qp_warm,
         state.health, jnp.asarray(0.0, jnp.float32),
     )
+    if fast:
+        carry0 = carry0 + (state.last_good,)
+        scan_xs = (chunks, on_rows, hw_base, i0_rows)
+    elif degraded:
+        scan_xs = (chunks, on_rows, hw_chunks)
+    else:
+        scan_xs = chunks
     if safemode:
         carry0 = (carry0, state.safemode)
-    final_carry, (grid_chunks, telem) = jax.lax.scan(
-        interval, carry0, (chunks, on_rows, hw_chunks) if degraded else chunks
-    )
+    final_carry, (grid_chunks, telem) = jax.lax.scan(interval, carry0, scan_xs)
     if safemode:
         final_carry, sm_f = final_carry
     else:
         sm_f = state.safemode
+    if fast:
+        last_good2 = final_carry[-1]
+        final_carry = final_carry[:-1]
     (x_f, es_f, u_prev, cmd_applied, cmd_target, soc_ema, warm_f, h_f, _) = (
         final_carry
     )
@@ -698,6 +803,9 @@ def condition_campus(
     use_plan: bool = True,
     ess_online: jax.Array | None = None,
     ess_weight: jax.Array | None = None,
+    faults: flt.FaultSchedule | None = None,
+    chunk_start: jax.Array | int = 0,
+    fault_edge: int = 1,
 ) -> tuple[PDUState, CampusChunk]:
     """One streaming-campus step: condition a chunk, reduce to aggregates.
 
@@ -713,6 +821,7 @@ def condition_campus(
     grid, state2, telem = condition(
         cfg, state, rack_power, qp_iters=qp_iters, use_plan=use_plan,
         ess_online=ess_online, ess_weight=ess_weight,
+        faults=faults, chunk_start=chunk_start, fault_edge=fault_edge,
     )
     if cfg.track_health:
         hsnap = hlt.chunk_aggregates(cfg.health, state2.health, cfg.sample_dt)

@@ -1,0 +1,82 @@
+"""Host-side phase profiling for the conditioning engines.
+
+``benchmarks/run.py --profile`` needs a per-bench phase breakdown
+(render / solve / kernel / host-sync) without dragging in the TensorBoard
+profile toolchain: this module keeps a process-global span accumulator the
+engine host loops annotate.  Spans are no-ops unless ``enable()`` was
+called, so the instrumented sites cost nothing in normal runs; when
+enabled, each span also opens a ``jax.profiler.TraceAnnotation`` so a full
+``jax.profiler.trace`` capture (for deep dives) carries the same phase
+names on its host timeline.
+
+Measurement model: JAX dispatch is asynchronous, so a wall-clock span
+around a jitted call measures dispatch, not execution.  ``span(name)``
+therefore blocks on the value returned from its body (``sync=...``) before
+closing the clock — profiling deliberately serializes the phases it
+measures.  That makes the phase *sum* close to (slightly above) the
+unprofiled wall clock, which is the right tradeoff for attribution.
+
+Only the phases that exist as host-visible stages can be timed this way:
+the streaming host engine renders chunks, dispatches the conditioning
+step, and assembles results on the host, so it is the engine ``--profile``
+re-runs.  Inside the step, the controller solve and the hardware megakernel
+fuse into one program; their split is estimated separately (see
+``benchmarks/run.py``) by timing one eagerly-executed kernel interval.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import jax
+
+_ENABLED = False
+_PHASES: dict[str, float] = {}
+
+
+def enable() -> None:
+    """Turn spans on and clear any accumulated phase times."""
+    global _ENABLED
+    _ENABLED = True
+    _PHASES.clear()
+
+
+def disable() -> None:
+    global _ENABLED
+    _ENABLED = False
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+def phases() -> dict[str, float]:
+    """Accumulated seconds per phase since ``enable()``."""
+    return dict(_PHASES)
+
+
+@contextlib.contextmanager
+def span(name: str):
+    """Accumulate wall time under ``name`` (no-op unless enabled).
+
+    The body may hand back a value to block on before the clock closes::
+
+        with profiling.span("solve") as sync:
+            out = step(...)
+            sync(out)
+    """
+    if not _ENABLED:
+        yield lambda x: x
+        return
+    blocked = []
+
+    def sync(x):
+        blocked.append(True)
+        return jax.block_until_ready(x)
+
+    t0 = time.perf_counter()
+    with jax.profiler.TraceAnnotation(f"repro.{name}"):
+        try:
+            yield sync
+        finally:
+            _PHASES[name] = _PHASES.get(name, 0.0) + (time.perf_counter() - t0)

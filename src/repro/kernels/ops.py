@@ -75,9 +75,12 @@ def pdu_health_sim(
 ):
     """Interval-resident conditioning megakernel: ``pdu_sim`` + in-kernel
     command slew (``slew=(applied, target)``) + fused battery-health fold
-    (``health=(step_consts, state_leaves)``).  One launch per controller
-    interval; see ``ref.pdu_health_sim`` for the exact semantics and the
-    bitwise contract.
+    (``health=(step_consts, state_leaves)``) + in-kernel ESS availability
+    rendering (``ess_events=(starts, ends, base, i0, t_last)`` with static
+    ``ess_edge``, replacing the streamed ``(T, R)`` ``ess_on`` weight
+    block with a compact fault-schedule boundary-event operand).  One
+    launch per controller interval; see ``ref.pdu_health_sim`` for the
+    exact semantics and the bitwise contract.
 
     ``guard=True`` (the safe-mode output guard) replaces any non-finite
     sample of the conditioned grid trace with the corresponding raw rack

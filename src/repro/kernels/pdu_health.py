@@ -67,6 +67,8 @@ def _megakernel(
     soc_max: float,
     masked: bool,
     mask_2d: bool,
+    events: bool,
+    ess_edge: int,
     slew: bool,
     track_health: bool,
     hconsts: tuple | None,
@@ -75,7 +77,9 @@ def _megakernel(
     ad_ref, bd_ref, c_ref, al_ref, s0_ref, r_ref, corr_ref = (
         next(it) for _ in range(7)
     )
-    on_ref = next(it) if masked else None
+    on_ref = next(it) if (masked and not events) else None
+    if events:
+        ev_st_ref, ev_en_ref, base_ref, iev_ref = (next(it) for _ in range(4))
     h0_ref = next(it) if track_health else None
     grid_ref, soc_ref, sf_ref = (next(it) for _ in range(3))
     hf_ref = next(it) if track_health else None
@@ -84,12 +88,52 @@ def _megakernel(
     b = bd_ref[...]
     c = c_ref[...]
     alpha = al_ref[0, 0]
-    w_row = on_ref[0, :] if (masked and not mask_2d) else None
+    w_row = on_ref[0, :] if (masked and not mask_2d and not events) else None
+    if events:
+        # Compact episode-table operand: (E, r_blk) sorted int32 boundary
+        # tables + a (r_blk,) base availability row, resident in VMEM for
+        # the whole interval — replaces the streamed (T, r_blk) weight
+        # block (HBM traffic O(E + 1) rows instead of O(T)).
+        ev_st = ev_st_ref[...]
+        ev_en = ev_en_ref[...]
+        ev_base = base_ref[0, :]
+        ev_i0 = iev_ref[0, 0]
+        ev_tlast = iev_ref[0, 1]
     if slew:
         applied = corr_ref[0, :]
         diff = corr_ref[1, :]
     if track_health:
         c0, c1, eps, kappa = hconsts
+
+    def events_weight(t):
+        # Per-step ESS availability from boundary events, the identical
+        # clip/where arithmetic as faults.ess_weight (rows sorted, so
+        # "entry j <= idx" == "count >= j+1" — same boundary selection as
+        # faults._select_boundaries, bitwise).  Clamping the absolute
+        # index to the last real sample replicates the streamed path's
+        # zero-order-hold repeat-padding.
+        idx_t = jnp.minimum(ev_i0 + t, ev_tlast)
+        started = [ev_st[j, :] <= idx_t for j in range(ev_st.shape[0])]
+        if ess_edge <= 1:
+            s_cnt = sum(s.astype(jnp.int32) for s in started)
+            e_cnt = sum(
+                (ev_en[j, :] <= idx_t).astype(jnp.int32)
+                for j in range(ev_en.shape[0])
+            )
+            intensity = ((s_cnt - e_cnt) > 0).astype(jnp.float32)
+        else:
+            inv = 1.0 / float(ess_edge)
+            st_sel, en_sel = ev_st[0, :], ev_en[0, :]
+            for j in range(1, ev_st.shape[0]):
+                st_sel = jnp.where(started[j], ev_st[j, :], st_sel)
+                en_sel = jnp.where(started[j], ev_en[j, :], en_sel)
+            wa = (idx_t - st_sel).astype(jnp.float32)
+            wb = (idx_t - en_sel).astype(jnp.float32)
+            w = jnp.clip((wa + 1.0) * inv, 0.0, 1.0) - jnp.clip(
+                (wb + 1.0) * inv, 0.0, 1.0
+            )
+            intensity = jnp.where(started[0], w, 0.0)
+        return (1.0 - intensity) * ev_base
 
     def step(t, carry):
         g, soc, x0, x1, x2, hm = carry
@@ -102,7 +146,10 @@ def _megakernel(
         else:
             c_t = corr_ref[t, :]
         if masked:
-            w_t = on_ref[t, :] if mask_2d else w_row
+            if events:
+                w_t = events_weight(t)
+            else:
+                w_t = on_ref[t, :] if mask_2d else w_row
         # --- ESS ramp control (paper Eq. 2, exact ZOH) --------------------
         g_new = g + alpha * (r_t - g)
         if masked:
@@ -171,7 +218,7 @@ def _megakernel(
     jax.jit,
     static_argnames=(
         "beta", "dt", "q_max", "eta_c", "eta_d", "p_max", "soc_min", "soc_max",
-        "health_consts", "r_blk", "interpret",
+        "health_consts", "ess_edge", "r_blk", "interpret",
     ),
 )
 def pdu_health_sim(
@@ -194,6 +241,8 @@ def pdu_health_sim(
     corrective: jax.Array | float = 0.0,
     slew: tuple[jax.Array, jax.Array] | None = None,
     ess_on: jax.Array | None = None,
+    ess_events: tuple | None = None,  # (starts, ends, base, i0, t_last)
+    ess_edge: int = 1,
     health_consts: tuple | None = None,  # (c0, c1, eps, kappa) host floats
     health_state: tuple | None = None,  # 11 HealthState leaves, (R,) each
     r_blk: int = 128,
@@ -201,13 +250,18 @@ def pdu_health_sim(
 ):
     """Interval-resident megakernel.  Same contract as ``ref.pdu_health_sim``
     (health passed as the split ``health_consts`` / ``health_state`` so the
-    consts stay static).  Returns
+    consts stay static; ``ess_events``/``ess_edge`` render the per-sample
+    availability weight in-kernel from sorted (E, R) boundary tables, see
+    the reference docstring).  Returns
     ``(grid (T,R), soc (T,R), (g_f, soc_f, x_f), health_leaves_or_None)``.
     """
     t, r = rack_power.shape
     track_health = health_state is not None
-    masked = ess_on is not None
-    mask_2d = masked and ess_on.ndim == 2
+    events = ess_events is not None
+    if events and ess_on is not None:
+        raise ValueError("pass either ess_on or ess_events, not both")
+    masked = ess_on is not None or events
+    mask_2d = ess_on is not None and ess_on.ndim == 2
     r_pad = -r % r_blk
     rp_w = r + r_pad
     t_pad = -t % 8  # sublane-align the time axis; the loop stops at t
@@ -254,9 +308,36 @@ def pdu_health_sim(
     if mask_2d:
         in_specs.append(pl.BlockSpec((t + t_pad, r_blk), lambda i: (0, i)))
         operands.append(pad_tr(ess_on))
-    elif masked:
+    elif masked and not events:
         in_specs.append(pl.BlockSpec((1, r_blk), lambda i: (0, i)))
         operands.append(pad_r(ess_on).reshape(1, rp_w))
+    if events:
+        ev_st, ev_en, ev_base, ev_i0, ev_tlast = ess_events
+
+        def pad_ri(x):  # (E, R) int32 table -> (E, R + r_pad), pad = never
+            x = jnp.asarray(x, jnp.int32)
+            if r_pad:
+                x = jnp.pad(
+                    x, ((0, 0), (0, r_pad)),
+                    constant_values=jnp.iinfo(jnp.int32).max,
+                )
+            return x
+
+        n_ev = ev_st.shape[0]
+        in_specs += [
+            pl.BlockSpec((n_ev, r_blk), lambda i: (0, i)),
+            pl.BlockSpec((n_ev, r_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, r_blk), lambda i: (0, i)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ]
+        operands += [
+            pad_ri(ev_st),
+            pad_ri(ev_en),
+            pad_r(ev_base).reshape(1, rp_w),
+            jnp.stack(
+                [jnp.asarray(ev_i0, jnp.int32), jnp.asarray(ev_tlast, jnp.int32)]
+            ).reshape(1, 2),
+        ]
     if track_health:
         h0 = jnp.stack([pad_r(l) for l in health_state[:6]], axis=0)  # (6, Rp)
         in_specs.append(pl.BlockSpec((6, r_blk), lambda i: (0, i)))
@@ -281,7 +362,8 @@ def pdu_health_sim(
             _megakernel,
             t_total=t, dt=dt, q_max=q_max, eta_c=eta_c,
             eta_d=eta_d, p_max=p_max, soc_min=soc_min, soc_max=soc_max,
-            masked=masked, mask_2d=mask_2d, slew=slew is not None,
+            masked=masked, mask_2d=mask_2d, events=events, ess_edge=ess_edge,
+            slew=slew is not None,
             track_health=track_health, hconsts=health_consts,
         ),
         grid=(rp_w // r_blk,),

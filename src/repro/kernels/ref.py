@@ -154,11 +154,13 @@ def pdu_health_sim(
     corrective: jax.Array | float = 0.0,  # scalar or (T, R)
     slew: tuple[jax.Array, jax.Array] | None = None,  # (applied, target) rows
     ess_on: jax.Array | None = None,  # (R,) or (T, R) availability weight
+    ess_events: tuple | None = None,  # (starts, ends, base, i0, t_last)
+    ess_edge: int = 1,
     health: tuple | None = None,  # ((c0, c1, eps, kappa), state_leaves)
 ) -> tuple[jax.Array, jax.Array, tuple, tuple | None]:
     """One-call oracle for the interval-resident conditioning megakernel.
 
-    Extends ``pdu_sim`` with the two fusions the megakernel performs per
+    Extends ``pdu_sim`` with the fusions the megakernel performs per
     controller interval:
 
     * **In-scan command slew** — ``slew=(applied, target)`` renders the
@@ -183,17 +185,70 @@ def pdu_health_sim(
       drift — so neither is used anywhere.  ``state_leaves`` is the flat
       ``HealthState`` tuple; the kernels layer stays free of ``core``
       imports.
+    * **In-scan ESS weight rendering** — ``ess_events=(starts, ends, base,
+      i0, t_last)`` replaces the streamed ``(T, R)`` availability block
+      with a compact episode-table operand: sorted ``(E, R)`` int32
+      start/end boundary tables (padded with empty intervals), a ``(R,)``
+      base availability row (interval online-mask x sensed-mask), and the
+      scalar absolute index ``i0`` of the first sample plus ``t_last``,
+      the absolute index of the last *real* sample (per-step indices clamp
+      to it so zero-order-hold padding replicates the last real weight,
+      matching the streamed path's repeat-pad).  Each step renders
+      ``w_t = (1 - edge_intensity(idx_t)) * base`` with the identical
+      clip/where arithmetic as ``faults.ess_weight`` — the same two float
+      ops on the same inputs as the precomputed ``weight * base`` product,
+      so the result is bitwise equal to streaming that product via
+      ``ess_on``.  ``ess_edge`` is the static wind-down width in samples
+      (``<= 1`` renders binary membership exactly).
 
     Returns ``(grid, soc_t, (g_f, soc_f, x_f), health_leaves_or_None)``.
     """
     alpha = 1.0 - jnp.exp(-jnp.asarray(beta) * dt)
     t = rack_power.shape[0]
-    masked = ess_on is not None
+    events = ess_events is not None
+    if events and ess_on is not None:
+        raise ValueError("pass either ess_on or ess_events, not both")
+    masked = ess_on is not None or events
     w_all = (
         jnp.broadcast_to(ess_on.astype(rack_power.dtype), rack_power.shape)
-        if masked
+        if ess_on is not None
         else None
     )
+    if events:
+        ev_st, ev_en, ev_base, ev_i0, ev_tlast = ess_events
+        ev_st = jnp.asarray(ev_st, jnp.int32)  # (E, R) sorted along axis 0
+        ev_en = jnp.asarray(ev_en, jnp.int32)
+        idxvec = jnp.minimum(
+            jnp.asarray(ev_i0, jnp.int32) + jnp.arange(t, dtype=jnp.int32),
+            jnp.asarray(ev_tlast, jnp.int32),
+        )
+
+        def events_weight(idx_t):
+            # Rows are sorted along the episode axis, so "entry j is
+            # at-or-before idx" is exactly "count >= j+1" — the unrolled
+            # compares below select the same boundaries (and the same
+            # cnt>0 gate) as faults._select_boundaries, bitwise.
+            started = [ev_st[j] <= idx_t for j in range(ev_st.shape[0])]
+            if ess_edge <= 1:
+                s_cnt = sum(s.astype(jnp.int32) for s in started)
+                e_cnt = sum(
+                    (ev_en[j] <= idx_t).astype(jnp.int32)
+                    for j in range(ev_en.shape[0])
+                )
+                intensity = ((s_cnt - e_cnt) > 0).astype(jnp.float32)
+            else:
+                inv = 1.0 / float(ess_edge)
+                st_sel, en_sel = ev_st[0], ev_en[0]
+                for j in range(1, ev_st.shape[0]):
+                    st_sel = jnp.where(started[j], ev_st[j], st_sel)
+                    en_sel = jnp.where(started[j], ev_en[j], en_sel)
+                a = (idx_t - st_sel).astype(jnp.float32)
+                b = (idx_t - en_sel).astype(jnp.float32)
+                w = jnp.clip((a + 1.0) * inv, 0.0, 1.0) - jnp.clip(
+                    (b + 1.0) * inv, 0.0, 1.0
+                )
+                intensity = jnp.where(started[0], w, 0.0)
+            return (1.0 - intensity) * ev_base
     if slew is not None:
         applied, target = slew
         diff = target - applied
@@ -216,7 +271,7 @@ def pdu_health_sim(
         else:
             (r_t, c_t, *rest) = inp
         if masked:
-            (w_t,) = rest
+            w_t = events_weight(rest[0]) if events else rest[0]
         g_new = g + alpha * (r_t - g)
         if masked:
             g_new = jnp.where(w_t > 0, g_new, r_t)
@@ -242,7 +297,7 @@ def pdu_health_sim(
     carry0 = (g0, soc0, x0[:, 0], x0[:, 1], x0[:, 2])
     xs = [rack_power, ramp01 if slew is not None else corr]
     if masked:
-        xs.append(w_all)
+        xs.append(idxvec if events else w_all)
     (g_f, soc_f, s0, s1, s2), (grid, soc_t) = jax.lax.scan(
         step, carry0, tuple(xs)
     )

@@ -18,13 +18,28 @@ renewal processes into a **struct-of-arrays fault schedule**:
     dropout** (the rack telemetry renders as NaN and the PDU bridges it
     with a last-good-sample hold);
   * episodes stored as sorted ``(R, K)`` start/end sample-index arrays, so
-    membership at any absolute sample is two ``searchsorted`` counts —
+    membership at any absolute sample is a pair of boundary-event counts —
     pure in the absolute index, which is what keeps chunked rendering
     bit-identical to whole-trace rendering and fault state resume-safe.
 
+Every derived signal funnels through ONE membership primitive
+(``_started``: how many boundary events of a sorted row are at-or-before
+an index) with two interchangeable backends: the **legacy** per-sample
+``searchsorted`` pair (the oracle), and the **compiled** evaluation that
+unrolls the tiny episode axis (K is single-digit for realistic
+MTBF/MTTR over one scenario) into K elementwise compares — no gathers,
+no binary-search chains, so XLA fuses the whole rendering into its
+consumer instead of duplicating a searchsorted DAG per use site
+(EXPERIMENTS.md §Perf-8).  The two backends produce identical integer
+counts and select identical boundary values, so every float that follows
+is bitwise the same; ``method="auto"`` picks the compiled form whenever
+``K <= _UNROLL_MAX``.
+
 The schedule rides in ``Scenario.faults`` (see ``power.scenario``) and is
-consumed by the renderer (rack/sensor channels) and by the fleet engines'
-per-interval ESS availability mask (``interval_online``).
+consumed by the renderer (rack/sensor channels), by the fleet engines'
+per-interval ESS availability mask (``interval_online``), and by the
+degraded-mode fast path (``interval_sensed`` / ``sensor_dark_hold`` plus
+the megakernel's compact episode-table operand, see ``core.pdu``).
 """
 from __future__ import annotations
 
@@ -42,6 +57,12 @@ NEVER = 1e30
 # Episode-count cap per (rack, channel): a backstop against absurd rates,
 # far above anything a realistic MTBF/MTTR pair produces over one scenario.
 MAX_EPISODES = 512
+
+# Widest episode axis the compiled membership path unrolls into elementwise
+# compares; beyond it, ``method="auto"`` falls back to the searchsorted
+# oracle (O(K) compares would start to lose to O(log K) binary search, and
+# schedules that busy are outside the regime the fast path is tuned for).
+_UNROLL_MAX = 32
 
 
 @pytree_dataclass
@@ -214,6 +235,17 @@ def sample_schedule(
     )
 
 
+def _coalesce(eps: list[tuple[int, int]]) -> list[tuple[int, int]]:
+    """Union of sorted ``(start, end)`` intervals (overlaps/adjacency merge)."""
+    out: list[tuple[int, int]] = []
+    for a, b in eps:
+        if out and a <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], b))
+        else:
+            out.append((a, b))
+    return out
+
+
 def schedule_from_episodes(
     n_racks: int,
     *,
@@ -234,15 +266,21 @@ def schedule_from_episodes(
             if e < s or s < 0:
                 raise ValueError(f"bad episode [{s}, {e}) for rack {r}")
             per[r].append((int(s), int(e)))
+        # Union-coalesce overlapping/adjacent episodes per rack, the same
+        # normalization ``inject_episodes`` applies: every consumer (and in
+        # particular the compiled dark-hold bridge, which assumes the
+        # sample before an episode start is outside every episode) relies
+        # on rows being sorted AND non-overlapping.
+        per = [_coalesce(sorted(p)) for p in per]
         k = max(max((len(p) for p in per), default=0), 1)
         # Pad unused slots *after* the real episodes with an empty interval
-        # at int32 max so every row stays sorted — the searchsorted
-        # membership tests silently misbehave on unsorted rows.
+        # at int32 max so every row stays sorted — the membership counts
+        # silently misbehave on unsorted rows.
         pad = np.iinfo(np.int32).max
         start = np.full((n_racks, k), pad, np.int32)
         end = np.full((n_racks, k), pad, np.int32)
         for r, p in enumerate(per):
-            for j, (s, e) in enumerate(sorted(p)):
+            for j, (s, e) in enumerate(p):
                 start[r, j], end[r, j] = s, e
         return jnp.asarray(start), jnp.asarray(end)
 
@@ -295,13 +333,7 @@ def inject_episodes(
                 [(int(a), int(b)) for a, b in zip(st[r][real], en[r][real])]
                 + per.get(r, [])
             )
-            out: list[tuple[int, int]] = []
-            for a, b in eps:  # union of intervals
-                if out and a <= out[-1][1]:
-                    out[-1] = (out[-1][0], max(out[-1][1], b))
-                else:
-                    out.append((a, b))
-            rows.append(out)
+            rows.append(_coalesce(eps))
         k = max(max(len(r) for r in rows), 1)
         pad = np.iinfo(np.int32).max
         ns = np.full((st.shape[0], k), pad, np.int32)
@@ -320,33 +352,151 @@ def inject_episodes(
     )
 
 
+def validate_tables(s: FaultSchedule) -> None:
+    """Host-side check that every episode table satisfies the invariants
+    the membership primitives assume: rows sorted ascending; real episodes
+    (``end > start``) non-overlapping with at least one clean sample
+    between them (the dark-hold bridge reads the sample *before* each
+    episode start); padding — empty ``end <= start`` slots, whether the
+    int32-max sentinel of ``schedule_from_episodes`` or the clamped
+    trace-end slots of ``sample_schedule`` — only *after* the real
+    episodes.  Schedules built by the module's own constructors hold these
+    by construction; hand-built tables are checked when a concrete
+    schedule is attached to a scenario.  A traced schedule (built inside a
+    jit) is skipped — invariants cannot be inspected there.
+    """
+    for name in ("rack", "ess", "sensor"):
+        st, en = getattr(s, f"{name}_start"), getattr(s, f"{name}_end")
+        if isinstance(st, jax.core.Tracer) or isinstance(en, jax.core.Tracer):
+            return
+        st, en = np.asarray(st), np.asarray(en)
+        if st.shape != en.shape or st.ndim != 2:
+            raise ValueError(
+                f"{name} episode tables must be matching (R, K) arrays, got "
+                f"{st.shape} / {en.shape}"
+            )
+        if np.any(en < st):
+            raise ValueError(
+                f"{name} table has an inverted episode (end < start); "
+                "episodes are [start, end) with end >= start"
+            )
+        real = en > st
+        if st.shape[1] > 1:
+            if np.any(st[:, 1:] < st[:, :-1]):
+                raise ValueError(
+                    f"{name} table rows must be sorted ascending by start "
+                    "(the membership counts silently misbehave on unsorted "
+                    "rows)"
+                )
+            if np.any(real[:, 1:] & ~real[:, :-1]):
+                raise ValueError(
+                    f"{name} table has a real episode after an empty "
+                    "padding slot; pad unused slots only after the real "
+                    "episodes"
+                )
+            if np.any(real[:, 1:] & (st[:, 1:] <= en[:, :-1])):
+                raise ValueError(
+                    f"{name} table rows must be non-overlapping with a gap "
+                    "of at least one sample between episodes (coalesce "
+                    "overlapping/adjacent episodes, as "
+                    "schedule_from_episodes does)"
+                )
+
+
 # --------------------------------------------------------------- membership
+#
+# ONE membership primitive (``_started``), two backends.  Everything below
+# — binary membership, edge-linearised intensity, interval masks, the
+# dark-hold bridge index — derives from "how many boundary events are
+# at-or-before this sample" plus "which episode started most recently",
+# so the legacy-vs-compiled bitwise contract reduces to those two integer
+# quantities being identical (tests/test_faults.py, fault-path
+# equivalence suite).
 
 
-def _active(starts: jax.Array, ends: jax.Array, idx: jax.Array) -> jax.Array:
+def _resolve_method(method: str, k: int) -> str:
+    if method == "auto":
+        return "compiled" if k <= _UNROLL_MAX else "legacy"
+    if method not in ("compiled", "legacy"):
+        raise ValueError(
+            f"method must be 'auto', 'compiled' or 'legacy', got {method!r}"
+        )
+    return method
+
+
+def _started(table: jax.Array, idx: jax.Array, method: str) -> jax.Array:
+    """(R, n) int32: per rack, how many entries of the sorted ``(R, K)``
+    boundary table are at-or-before each absolute sample index.
+
+    The single membership primitive.  ``legacy`` is a per-rack
+    ``searchsorted(side="right")``; ``compiled`` unrolls the episode axis
+    into K elementwise compares — identical counts (both are the exact
+    cardinality ``#{j : table[r, j] <= idx}``), but the compiled form is
+    pure fuseable arithmetic with no gather/binary-search chain.
+    """
+    if _resolve_method(method, table.shape[1]) == "legacy":
+        return jax.vmap(
+            lambda row: jnp.searchsorted(row, idx, side="right")
+        )(table).astype(jnp.int32)
+    cnt = jnp.zeros((table.shape[0], idx.shape[0]), jnp.int32)
+    for j in range(table.shape[1]):
+        cnt = cnt + (table[:, j : j + 1] <= idx[None, :]).astype(jnp.int32)
+    return cnt
+
+
+def _select_boundaries(
+    starts: jax.Array, ends: jax.Array, idx: jax.Array, method: str
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``(cnt, st_sel, en_sel)``, each (R, n): the start-boundary count at
+    each index plus the boundaries of the most recently started episode
+    (row 0's boundaries where none has started yet — callers gate on
+    ``cnt > 0``, matching the legacy clipped gather exactly)."""
+    if _resolve_method(method, starts.shape[1]) == "legacy":
+
+        def per_rack(st, en):
+            cnt = jnp.searchsorted(st, idx, side="right").astype(jnp.int32)
+            jc = jnp.clip(cnt - 1, 0, st.shape[0] - 1)
+            return cnt, st[jc], en[jc]
+
+        return jax.vmap(per_rack)(starts, ends)
+    cnt = _started(starts, idx, method)
+    st_sel = jnp.broadcast_to(starts[:, :1], cnt.shape)
+    en_sel = jnp.broadcast_to(ends[:, :1], cnt.shape)
+    for j in range(1, starts.shape[1]):
+        pick = cnt >= (j + 1)
+        st_sel = jnp.where(pick, starts[:, j : j + 1], st_sel)
+        en_sel = jnp.where(pick, ends[:, j : j + 1], en_sel)
+    return cnt, st_sel, en_sel
+
+
+def _active(
+    starts: jax.Array, ends: jax.Array, idx: jax.Array, method: str = "auto"
+) -> jax.Array:
     """(n, R) bool: is any episode of each rack active at each sample?
 
     Episode rows are sorted and non-overlapping (alternating process), so
-    membership is ``#started - #ended > 0`` — two searchsorted counts per
+    membership is ``#started - #ended > 0`` — two boundary counts per
     rack, no (n, R, K) materialization.
     """
-    def per_rack(st, en):
-        return (
-            jnp.searchsorted(st, idx, side="right")
-            - jnp.searchsorted(en, idx, side="right")
-        )
-
-    return (jax.vmap(per_rack)(starts, ends) > 0).T  # (R, n) -> (n, R)
+    started = _started(starts, idx, method)
+    ended = _started(ends, idx, method)
+    return (started - ended > 0).T  # (R, n) -> (n, R)
 
 
-def rack_down(s: FaultSchedule, t0: jax.Array, n: int) -> jax.Array:
+def rack_down(
+    s: FaultSchedule, t0: jax.Array, n: int, *, method: str = "auto"
+) -> jax.Array:
     """(n, R) bool: rack-power-loss membership for samples [t0, t0+n)."""
     idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
-    return _active(s.rack_start, s.rack_end, idx)
+    return _active(s.rack_start, s.rack_end, idx, method)
 
 
 def _edge_intensity(
-    starts: jax.Array, ends: jax.Array, idx: jax.Array, edge: int
+    starts: jax.Array,
+    ends: jax.Array,
+    idx: jax.Array,
+    edge: int,
+    method: str = "auto",
 ) -> jax.Array:
     """(n, R) float32 episode intensity in [0, 1] with linearised edges:
     ramps 0 -> 1 over the ``edge`` samples following an episode start and
@@ -356,28 +506,26 @@ def _edge_intensity(
     Each sample's intensity depends only on its absolute index and the
     static schedule (episode rows are sorted and non-overlapping, so the
     most recent start fully determines the local ramp), which keeps
-    chunked evaluation bit-identical to whole-trace evaluation.
+    chunked evaluation bit-identical to whole-trace evaluation.  Both
+    membership backends select the same boundary integers, and the ramp
+    arithmetic that follows is the identical elementwise expression, so
+    ``compiled`` and ``legacy`` intensities are bitwise equal.
     """
     if edge <= 1:
-        return _active(starts, ends, idx).astype(jnp.float32)
+        return _active(starts, ends, idx, method).astype(jnp.float32)
 
     inv = 1.0 / float(edge)
-
-    def per_rack(st, en):
-        j = jnp.searchsorted(st, idx, side="right") - 1
-        jc = jnp.clip(j, 0, st.shape[0] - 1)
-        a = (idx - st[jc]).astype(jnp.float32)
-        b = (idx - en[jc]).astype(jnp.float32)
-        w = jnp.clip((a + 1.0) * inv, 0.0, 1.0) - jnp.clip(
-            (b + 1.0) * inv, 0.0, 1.0
-        )
-        return jnp.where(j >= 0, w, 0.0)
-
-    return jax.vmap(per_rack)(starts, ends).T  # (R, n) -> (n, R)
+    cnt, st_sel, en_sel = _select_boundaries(starts, ends, idx, method)
+    a = (idx[None, :] - st_sel).astype(jnp.float32)
+    b = (idx[None, :] - en_sel).astype(jnp.float32)
+    w = jnp.clip((a + 1.0) * inv, 0.0, 1.0) - jnp.clip(
+        (b + 1.0) * inv, 0.0, 1.0
+    )
+    return jnp.where(cnt > 0, w, 0.0).T  # (R, n) -> (n, R)
 
 
 def fault_weight(
-    s: FaultSchedule, t0: jax.Array, n: int, edge: int
+    s: FaultSchedule, t0: jax.Array, n: int, edge: int, *, method: str = "auto"
 ) -> jax.Array:
     """(n, R) float32 rack power-loss intensity in [0, 1].
 
@@ -389,11 +537,11 @@ def fault_weight(
     an unphysical ``p_step/dt`` impulse on the grid ramp metric.
     """
     idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
-    return _edge_intensity(s.rack_start, s.rack_end, idx, edge)
+    return _edge_intensity(s.rack_start, s.rack_end, idx, edge, method)
 
 
 def ess_weight(
-    s: FaultSchedule, t0: jax.Array, n: int, edge: int
+    s: FaultSchedule, t0: jax.Array, n: int, edge: int, *, method: str = "auto"
 ) -> jax.Array:
     """(n, R) float32 *per-sample* ESS availability weight in [0, 1]:
     1 = battery branch fully engaged, 0 = tripped offline, fractional
@@ -412,17 +560,24 @@ def ess_weight(
     chunked, resumed, and one-shot conditioning see identical weights.
     """
     idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
-    return 1.0 - _edge_intensity(s.ess_start, s.ess_end, idx, edge)
+    return 1.0 - _edge_intensity(s.ess_start, s.ess_end, idx, edge, method)
 
 
-def sensor_down(s: FaultSchedule, t0: jax.Array, n: int) -> jax.Array:
+def sensor_down(
+    s: FaultSchedule, t0: jax.Array, n: int, *, method: str = "auto"
+) -> jax.Array:
     """(n, R) bool: sensor-dropout membership for samples [t0, t0+n)."""
     idx = jnp.asarray(t0, jnp.int32) + jnp.arange(n, dtype=jnp.int32)
-    return _active(s.sensor_start, s.sensor_end, idx)
+    return _active(s.sensor_start, s.sensor_end, idx, method)
 
 
 def interval_online(
-    s: FaultSchedule, start_sample: jax.Array, n_intervals: int, k: int
+    s: FaultSchedule,
+    start_sample: jax.Array,
+    n_intervals: int,
+    k: int,
+    *,
+    method: str = "auto",
 ) -> jax.Array:
     """(n_intervals, R) float32 ESS availability mask, one row per
     controller interval starting at ``start_sample``.
@@ -436,8 +591,72 @@ def interval_online(
     idx = jnp.asarray(start_sample, jnp.int32) + k * jnp.arange(
         n_intervals, dtype=jnp.int32
     )
-    down = _active(s.ess_start, s.ess_end, idx)
+    down = _active(s.ess_start, s.ess_end, idx, method)
     return 1.0 - down.astype(jnp.float32)
+
+
+def interval_sensed(
+    s: FaultSchedule,
+    start_sample: jax.Array,
+    n_intervals: int,
+    k: int,
+    *,
+    stop: jax.Array | None = None,
+    method: str = "auto",
+) -> jax.Array:
+    """(n_intervals, R) bool: does each controller interval contain at
+    least one finite (non-dark) sample for each rack?
+
+    Schedule-side equivalent of the degraded path's
+    ``any(isfinite(chunk))`` per-interval reduction over the rendered
+    trace: interval ``i`` (samples ``[i0, i0 + k)`` with
+    ``i0 = start_sample + i*k``) is fully dark iff one sensor episode
+    covers it entirely, i.e. the episode active at ``i0`` ends at or
+    after ``min(i0 + k, stop)``.  ``stop`` is where real samples end
+    (``start_sample + n`` for an ``n``-sample chunk); the trailing
+    zero-order-hold padding of a partial final interval replicates the
+    last real sample, so only coverage up to ``stop`` matters — exactly
+    how the rendered-trace reduction sees it.
+    """
+    i0 = jnp.asarray(start_sample, jnp.int32) + k * jnp.arange(
+        n_intervals, dtype=jnp.int32
+    )
+    hi = i0 + k if stop is None else jnp.minimum(i0 + k, jnp.asarray(stop, jnp.int32))
+    cnt, st_sel, en_sel = _select_boundaries(
+        s.sensor_start, s.sensor_end, i0, method
+    )
+    active = (cnt - _started(s.sensor_end, i0, method)) > 0
+    covered = active & (en_sel >= hi[None, :])
+    del st_sel
+    return (~covered).T  # (R, n_intervals) -> (n_intervals, R)
+
+
+def sensor_dark_hold(
+    s: FaultSchedule, idx: jax.Array, *, method: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """``(dark, hold)``, each (n, R): per-sample sensor-dropout membership
+    plus the absolute index of the last finite sample before the covering
+    episode (``start - 1``; arbitrary where ``dark`` is False).
+
+    This is the schedule-side form of the rendered-trace NaN bridge
+    (``pdu.bridge_sensors``): because episode rows are coalesced
+    (non-overlapping with >= 1 healthy sample between episodes — the
+    alternating process draws up-times >= 1 sample, and scripted
+    injection unions overlaps), the sample at ``start - 1`` is always
+    finite, so holding it reproduces the associative-scan last-good
+    bridge bit-for-bit wherever ``start - 1`` falls inside the window at
+    hand; earlier starts fall through to the caller's carried last-good
+    row, which is the same cross-chunk hold value the legacy bridge
+    carries.
+    """
+    cnt, st_sel, en_sel = _select_boundaries(
+        s.sensor_start, s.sensor_end, idx, method
+    )
+    del en_sel
+    # Rows are paired and non-overlapping, so "started more often than
+    # ended" already pins idx inside the most recently started episode.
+    dark = (cnt - _started(s.sensor_end, idx, method)) > 0
+    return dark.T, (st_sel - 1).T  # (R, n) -> (n, R)
 
 
 def episodes_in_window(

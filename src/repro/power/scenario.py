@@ -279,13 +279,19 @@ def attach_faults(
 
     Accepts a ``faults.FaultProcess`` (sampled here against the scenario's
     geometry with counter-based draws) or a pre-built
-    ``faults.FaultSchedule`` (rack count must match).
+    ``faults.FaultSchedule`` (rack count must match).  A pre-built
+    schedule's episode tables are validated host-side
+    (``faults.validate_tables``): the interval-compiled fault path selects
+    episode boundaries by rank, which assumes sorted, coalesced,
+    sentinel-padded rows — hand-built tables that violate this would
+    silently render the wrong availability.
     """
     from repro.power import faults as FLT
 
     n = s.n_racks or 1
     if isinstance(process_or_schedule, FLT.FaultSchedule):
         sched = process_or_schedule
+        FLT.validate_tables(sched)
     else:
         sched = FLT.sample_schedule(
             process_or_schedule, n, s.total_samples, s.sample_hz,

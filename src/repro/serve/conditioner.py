@@ -244,6 +244,17 @@ class ConditionerService:
             self.state = pdu.init_state(cfg, r0, soc0=soc0)
             self.n_racks = int(np.asarray(self.state.ess_online).shape[0])
             has_faults = getattr(scenario, "faults", None) is not None
+        # Which availability path the engine will take, for the operator's
+        # perf expectations: "compiled" = interval-compiled episode tables
+        # rendered inside the conditioning scan (faulty windows cost about
+        # the same as clean ones); "streamed" = the safe-mode supervisor
+        # needs materialized per-sample masks, so faulty windows pay the
+        # legacy streaming tax.
+        fault_path = None
+        if cfg.degraded_mode and has_faults:
+            fault_path = (
+                "streamed" if getattr(cfg, "safemode", None) else "compiled"
+            )
         self.audit.append(
             "service_start",
             sample=0,
@@ -253,6 +264,7 @@ class ConditionerService:
             sample_hz=float(scenario.sample_hz),
             degraded_mode=bool(cfg.degraded_mode),
             has_fault_schedule=has_faults,
+            fault_path=fault_path,
         )
 
     # ------------------------------------------------------------- position

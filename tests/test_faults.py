@@ -323,6 +323,236 @@ def test_ess_online_requires_degraded_mode():
         )
 
 
+# ---------------------------------- compiled-vs-legacy fault rendering
+#
+# The interval-compiled fault path (PR 10) renders every availability
+# signal from episode boundary events with a K-unrolled membership count;
+# the legacy path is the per-sample vmapped searchsorted oracle.  Both
+# reduce to the same two integers ("episodes started" / "episodes ended"
+# at-or-before each sample), so every derived float must be bitwise
+# identical at any chunk split or resume point.
+
+
+def _equivalence_schedules():
+    """Schedules covering both padding conventions: stochastic (trace-end
+    clamped empty slots), a scripted cascade injected on top (re-coalesced
+    rows), and a hand-scripted table with mixed episode counts per rack
+    (int32-max sentinel padding)."""
+    stoch = FLT.sample_schedule(_proc(), 6, 9000, _HZ, seed=5)
+    cascade = FLT.inject_episodes(
+        stoch,
+        rack=[(i, 4000 + i * 37, 4600 + i * 41) for i in range(6)],
+        sensor=[(2, 8000, 8999)],
+    )
+    scripted = FLT.schedule_from_episodes(
+        6,
+        rack=[(0, 100, 200), (0, 300, 400), (0, 450, 470), (1, 50, 60)],
+        ess=[(2, 10, 900), (2, 2000, 2400), (4, 8990, 9000)],
+        sensor=[(3, 120, 180)],
+    )
+    return {"stochastic": stoch, "cascade": cascade, "scripted": scripted}
+
+
+_EQ_RENDERERS = {
+    "rack_down": lambda s, t0, n, m: FLT.rack_down(s, t0, n, method=m),
+    "sensor_down": lambda s, t0, n, m: FLT.sensor_down(s, t0, n, method=m),
+    "fault_weight_e7": lambda s, t0, n, m: FLT.fault_weight(s, t0, n, 7, method=m),
+    "fault_weight_e1": lambda s, t0, n, m: FLT.fault_weight(s, t0, n, 1, method=m),
+    "ess_weight_e7": lambda s, t0, n, m: FLT.ess_weight(s, t0, n, 7, method=m),
+    "ess_weight_e0": lambda s, t0, n, m: FLT.ess_weight(s, t0, n, 0, method=m),
+}
+
+
+@pytest.mark.parametrize("sched_name", ["stochastic", "cascade", "scripted"])
+@pytest.mark.parametrize("fn_name", sorted(_EQ_RENDERERS))
+def test_compiled_rendering_bitwise_vs_legacy(sched_name, fn_name):
+    s = _equivalence_schedules()[sched_name]
+    fn = _EQ_RENDERERS[fn_name]
+    # Whole window and resume points that land mid-episode, mid-ramp, and
+    # in the trailing clamped region.
+    for t0, n in ((0, 9000), (123, 2000), (4391, 777), (8800, 200)):
+        legacy = np.asarray(fn(s, t0, n, "legacy"))
+        compiled = np.asarray(fn(s, t0, n, "compiled"))
+        np.testing.assert_array_equal(legacy, compiled)
+
+
+@pytest.mark.parametrize("sched_name", ["stochastic", "cascade", "scripted"])
+@pytest.mark.parametrize("chunk", [700, 1500])
+def test_compiled_rendering_chunk_bitwise(sched_name, chunk):
+    s = _equivalence_schedules()[sched_name]
+    for fn_name in ("fault_weight_e7", "ess_weight_e7"):
+        fn = _EQ_RENDERERS[fn_name]
+        whole = np.asarray(fn(s, 0, 9000, "compiled"))
+        parts = np.concatenate([
+            np.asarray(fn(s, t0, min(chunk, 9000 - t0), "compiled"))
+            for t0 in range(0, 9000, chunk)
+        ])
+        np.testing.assert_array_equal(whole, parts)
+
+
+def test_compiled_interval_masks_bitwise_vs_legacy():
+    k = 500
+    for s in _equivalence_schedules().values():
+        for t0 in (0, 3 * k):
+            on_l = np.asarray(FLT.interval_online(s, t0, 12, k, method="legacy"))
+            on_c = np.asarray(FLT.interval_online(s, t0, 12, k, method="compiled"))
+            np.testing.assert_array_equal(on_l, on_c)
+            se_l = np.asarray(FLT.interval_sensed(s, t0, 12, k, method="legacy"))
+            se_c = np.asarray(FLT.interval_sensed(s, t0, 12, k, method="compiled"))
+            np.testing.assert_array_equal(se_l, se_c)
+
+
+def test_interval_sensed_matches_isfinite_oracle():
+    """``interval_sensed`` must equal the legacy any(isfinite) reduction
+    over the ZOH-padded chunk — including a partial final interval, where
+    the pad replicates the last real sample."""
+    s = _equivalence_schedules()["cascade"]
+    k = 500
+    for t0, n_int, stop in ((0, 6, None), (1000, 4, 1000 + 3 * 500 + 137)):
+        t_end = t0 + n_int * k if stop is None else stop
+        dead = np.asarray(FLT.sensor_down(s, t0, t_end - t0))
+        # ZOH pad to whole intervals with the last real row, as
+        # pdu.condition pads its trailing partial interval.
+        pad = n_int * k - dead.shape[0]
+        if pad:
+            dead = np.concatenate([dead, np.repeat(dead[-1:], pad, 0)])
+        oracle = ~dead.reshape(n_int, k, -1).all(axis=1)
+        got = np.asarray(FLT.interval_sensed(s, t0, n_int, k, stop=stop))
+        np.testing.assert_array_equal(got, oracle)
+
+
+def test_sensor_dark_hold_matches_membership():
+    """``dark`` must equal per-sample sensor membership, and every held
+    index must point at the clean sample just before its episode start."""
+    s = _equivalence_schedules()["cascade"]
+    idx = jnp.arange(1000, 3000, dtype=jnp.int32)
+    dark, hold = (np.asarray(x) for x in FLT.sensor_dark_hold(s, idx))
+    np.testing.assert_array_equal(
+        dark, np.asarray(FLT.sensor_down(s, 1000, 2000))
+    )
+    assert np.any(dark), "window has no sensor outage to exercise"
+    starts = np.asarray(s.sensor_start)
+    ends = np.asarray(s.sensor_end)
+    r_idx, t_off = np.nonzero(dark.T)
+    for r, t in zip(r_idx[:200], t_off[:200]):
+        h = hold[t, r]
+        # hold is the sample before the episode start: a real episode
+        # boundary, and (coalesced rows) outside every episode.
+        assert (h + 1) in starts[r]
+        assert not np.any((starts[r] <= h) & (h < ends[r]))
+
+
+def test_auto_method_falls_back_past_unroll_limit():
+    wide = FLT.sample_schedule(
+        _proc(), 4, 9000, _HZ, seed=5, max_episodes=FLT._UNROLL_MAX + 8
+    )
+    assert wide.rack_start.shape[1] > FLT._UNROLL_MAX
+    assert FLT._resolve_method("auto", int(wide.rack_start.shape[1])) == "legacy"
+    assert FLT._resolve_method("auto", 4) == "compiled"
+    # The explicit compiled path still agrees even past the auto cutoff.
+    np.testing.assert_array_equal(
+        np.asarray(FLT.rack_down(wide, 0, 9000, method="legacy")),
+        np.asarray(FLT.rack_down(wide, 0, 9000, method="compiled")),
+    )
+    with pytest.raises(ValueError):
+        FLT._resolve_method("fast", 4)
+
+
+def test_validate_tables_accepts_both_padding_conventions():
+    for s in _equivalence_schedules().values():
+        FLT.validate_tables(s)  # must not raise
+    import dataclasses
+    good = _equivalence_schedules()["scripted"]
+    bad = dataclasses.replace(
+        good, ess_start=good.ess_start.at[2, 1].set(100)
+    )
+    with pytest.raises(ValueError):
+        FLT.validate_tables(bad)
+
+
+def test_events_kernel_matches_streamed_weight():
+    """The megakernel's compact boundary-event operand must reproduce the
+    streamed per-sample weight block bitwise (ref backend — the oracle the
+    Pallas kernel is held to in tests/test_pdu_health_kernel.py)."""
+    from repro.kernels import ref as kref
+
+    s = _equivalence_schedules()["cascade"]
+    n_racks = 6
+    t, k = 1000, 500
+    cfg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    rng = np.random.default_rng(0)
+    tr = jnp.asarray(rng.uniform(0.2, 0.9, (t, n_racks)), jnp.float32)
+    st = pdu.init_state(cfg, tr[0])
+    ep = cfg.ess_params
+    filt = st.filter_obj
+    base = jnp.asarray(0.5 + np.arange(n_racks) / 8.0, jnp.float32)
+    kkw = dict(
+        beta=float(ep.beta), dt=1.0 / _HZ, q_max=float(ep.q_max),
+        eta_c=float(ep.eta_c), eta_d=float(ep.eta_d),
+        p_max=float(ep.p_max), soc_min=float(ep.soc_safe_min),
+        soc_max=float(ep.soc_safe_max),
+    )
+    args = (tr, st.ess_state.g_filter, st.ess_state.soc, st.filter_state,
+            filt.ad, filt.bd, filt.c[0])
+    for t0, edge in ((0, 1), (2000, 7), (4391, 7)):
+        streamed = FLT.ess_weight(s, t0, t, edge) * base[None, :]
+        events = (
+            s.ess_start.T, s.ess_end.T, base,
+            jnp.asarray(t0, jnp.int32), jnp.asarray(t0 + t - 1, jnp.int32),
+        )
+        r_st = kref.pdu_health_sim(*args, ess_on=streamed, **kkw)
+        r_ev = kref.pdu_health_sim(*args, ess_events=events, ess_edge=edge, **kkw)
+        for a, b in zip(jax.tree_util.tree_leaves(r_st),
+                        jax.tree_util.tree_leaves(r_ev)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_condition_faults_fast_path_bitwise():
+    """``pdu.condition(..., faults=schedule)`` — the interval-compiled fast
+    path — against the legacy streamed mask/weight arrays: grid, every
+    carried state leaf, and every telemetry leaf bitwise, whole-trace and
+    resumed mid-stream."""
+    s = _faulty_campus()
+    tr = SC.render(s, 0, s.total_samples)
+    deg = pdu.make_pdu(sample_dt=1.0 / _HZ, degraded_mode=True)
+    k = int(round(float(deg.controller.dt) * _HZ))
+    n_ctrl = -(-s.total_samples // k)
+    edge = 7
+    on = FLT.interval_online(s.faults, 0, n_ctrl, k)
+    wt = FLT.ess_weight(s.faults, 0, s.total_samples, edge)
+
+    g_leg, st_leg, te_leg = pdu.condition(
+        deg, pdu.init_state(deg, tr[0]), tr, qp_iters=20,
+        ess_online=on, ess_weight=wt,
+    )
+    g_fast, st_fast, te_fast = pdu.condition(
+        deg, pdu.init_state(deg, tr[0]), tr, qp_iters=20,
+        faults=s.faults, chunk_start=0, fault_edge=edge,
+    )
+    np.testing.assert_array_equal(np.asarray(g_leg), np.asarray(g_fast))
+    for a, b in zip(jax.tree_util.tree_leaves((st_leg, te_leg)),
+                    jax.tree_util.tree_leaves((st_fast, te_fast))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # Resume at an interval boundary: two fast-path calls glue bitwise.
+    cut = 7 * k
+    st = pdu.init_state(deg, tr[0])
+    g1, st, _ = pdu.condition(
+        deg, st, tr[:cut], qp_iters=20,
+        faults=s.faults, chunk_start=0, fault_edge=edge,
+    )
+    g2, st, _ = pdu.condition(
+        deg, st, tr[cut:], qp_iters=20,
+        faults=s.faults, chunk_start=cut, fault_edge=edge,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(g_leg), np.concatenate([np.asarray(g1), np.asarray(g2)])
+    )
+    for a, b in zip(jax.tree_util.tree_leaves(st_leg),
+                    jax.tree_util.tree_leaves(st)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_apply_failures_matches_fault_engine():
     """The legacy helper is now a shim over the schedule machinery."""
     traces = jnp.ones((100, 3), jnp.float32) * 0.8
